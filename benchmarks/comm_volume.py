@@ -1,0 +1,53 @@
+"""§4.1 communication accounting: exact bytes moved across the replica
+boundary per gradient evaluation, Parle vs Elastic-SGD vs data-parallel
+SGD, for each assigned architecture at full scale (analytic — no
+allocation), plus the measured collective bytes from the dry-run HLO
+when results/dryrun exists."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from repro.configs import ARCHS, get_config
+
+L = 25  # paper §3.1
+
+
+def analytic_rows():
+    rows = []
+    for name in sorted(ARCHS):
+        cfg = get_config(name)
+        nbytes = cfg.num_params() * 2            # bf16
+        elastic = 2 * nbytes                     # reduce + broadcast / step
+        parle_amortized = elastic / L
+        dp_sgd = 2 * nbytes                      # grad all-reduce / step
+        rows.append((name, nbytes, dp_sgd, elastic, parle_amortized))
+    return rows
+
+
+def main():
+    out = []
+    for name, nb, dp, el, pa in analytic_rows():
+        out.append(f"comm_{name},0,params_gb={nb/1e9:.2f};"
+                   f"dp_sgd_gb_per_step={dp/1e9:.2f};"
+                   f"elastic_gb_per_step={el/1e9:.2f};"
+                   f"parle_gb_per_step={pa/1e9:.3f};reduction_x={el/pa:.0f}")
+    # measured: parle_sync collective bytes from dry-run JSONs (multi-pod)
+    for f in sorted(glob.glob("results/dryrun/*__mp.json")):
+        rec = json.load(open(f))
+        for prog in rec["programs"]:
+            if prog["program"] == "parle_sync":
+                cb = prog["collectives"]["total_bytes"]
+                out.append(f"comm_measured_{rec['arch']}_{rec['shape']},0,"
+                           f"sync_collective_bytes_per_device={cb:.3e};"
+                           f"amortized_per_step={cb/L:.3e}")
+    for line in out:
+        print(line)
+    return out
+
+
+if __name__ == "__main__":
+    main()

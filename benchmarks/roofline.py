@@ -1,0 +1,85 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown +
+CSV lines).  Reads results/dryrun/*.json produced by launch/dryrun.py."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+L = 25  # Parle sync amortization
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def summarize(rec):
+    """One row per (arch, shape, mesh): amortize parle_sync into the
+    train_inner step; report dominant term + model-flops ratio."""
+    progs = {p["program"]: p for p in rec["programs"]}
+    if "train_inner" in progs:
+        base = progs["train_inner"]
+        sync = progs.get("parle_sync")
+        r = dict(base["roofline"])
+        sync_coll = sync["collectives"]["total_bytes"] / 50e9 if sync else 0.0
+        r["collective_s"] += sync_coll / L
+        r["sync_amortized_s"] = sync_coll / L
+        flops = base["flops_total"]
+        ratio = base.get("model_flops_ratio")
+        program = "train(inner+sync/L)"
+    else:
+        p = progs.get("prefill") or progs.get("decode")
+        r = dict(p["roofline"])
+        r["sync_amortized_s"] = 0.0
+        flops = p["flops_total"]
+        ratio = p.get("model_flops_ratio")
+        program = p["program"]
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "program": program, **r, "dominant": dom,
+        "hlo_flops_total": flops, "model_flops_ratio": ratio,
+    }
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("roofline_no_dryrun_results,0,run launch/dryrun.py first")
+        return []
+    out = []
+    for rec in recs:
+        s = summarize(rec)
+        out.append(
+            f"roofline_{s['arch']}_{s['shape']}_{s['mesh']},0,"
+            f"compute_s={s['compute_s']:.3e};memory_s={s['memory_s']:.3e};"
+            f"collective_s={s['collective_s']:.3e};dominant={s['dominant']};"
+            f"mf_ratio={s['model_flops_ratio'] if s['model_flops_ratio'] is None else round(s['model_flops_ratio'],3)}")
+    for line in out:
+        print(line)
+    return out
+
+
+def markdown_table(out_dir="results/dryrun", mesh="16x16"):
+    rows = [summarize(r) for r in load(out_dir) if r["mesh"] == mesh]
+    lines = ["| arch | shape | program | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO flops |",
+             "|---|---|---|---|---|---|---|---|"]
+    for s in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mfr = s["model_flops_ratio"]
+        lines.append(
+            f"| {s['arch']} | {s['shape']} | {s['program']} | "
+            f"{s['compute_s']:.2e} | {s['memory_s']:.2e} | "
+            f"{s['collective_s']:.2e} | {s['dominant'].replace('_s','')} | "
+            f"{'-' if mfr is None else f'{mfr:.2f}'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "md":
+        print(markdown_table())
+    else:
+        main()

@@ -1,0 +1,32 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table1     # one
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (comm_volume, fig1_overlap, kernel_bench, roofline,
+                        table1_baselines, table2_split_data)
+
+SUITES = {
+    "table1": table1_baselines.main,     # Parle vs baselines (Table 1)
+    "table2": table2_split_data.main,    # data splitting (Table 2, §5)
+    "fig1": fig1_overlap.main,           # overlap / one-shot avg (§1.2)
+    "comm": comm_volume.main,            # §4.1 communication accounting
+    "kernels": kernel_bench.main,        # Pallas kernel oracle micro-bench
+    "roofline": roofline.main,           # §Roofline aggregation
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    for name in wanted:
+        print(f"# --- {name} ---", flush=True)
+        SUITES[name]()
+
+
+if __name__ == '__main__':
+    main()

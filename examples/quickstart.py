@@ -1,0 +1,72 @@
+"""Quickstart: Parle vs SGD in ~1 minute on CPU.
+
+Trains the same MLP classifier with (a) data-parallel SGD and (b) Parle
+with 3 replicas (paper hyper-parameters: L=25, alpha=0.75, gamma0=100,
+rho0=1, Nesterov 0.9), then prints the paper's Table-1-style comparison:
+Parle generalizes better while under-fitting the train set.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 400]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs.base import ParleConfig
+from repro.core import ensemble, parle
+from repro.data.synthetic import TeacherTask, replica_batches
+from repro.models.convnet import (classification_loss, error_rate, init_mlp,
+                                  mlp_forward)
+from repro.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--replicas", type=int, default=3)
+    args = ap.parse_args()
+
+    task = TeacherTask()
+    loss_raw = classification_loss(mlp_forward)
+    loss_fn = lambda p, b: (loss_raw(p, b)[0], ())
+    params = init_mlp(jax.random.PRNGKey(0))
+    bs = 128
+
+    # ---- SGD baseline -------------------------------------------
+    st = sgd.init(params)
+    step = jax.jit(sgd.make_train_step(loss_fn, 0.1))
+    t0 = time.time()
+    for i in range(args.steps):
+        st, _ = step(st, task.train_batch(i, bs))
+    t_sgd = time.time() - t0
+    sgd_test = float(error_rate(mlp_forward, st.params, task.test_batch()))
+    sgd_train = float(error_rate(mlp_forward, st.params,
+                                 {"x": task.x_train, "y": task.y_train}))
+
+    # ---- Parle (paper §3.1 defaults) ----------------------------
+    pcfg = ParleConfig(n_replicas=args.replicas, L=25, lr=0.1, lr_inner=0.1,
+                       batches_per_epoch=task.batches_per_epoch(bs))
+    pst = parle.init(params, pcfg)
+    pstep = jax.jit(parle.make_train_step(loss_fn, pcfg))
+    t0 = time.time()
+    for i in range(args.steps):
+        pst, _ = pstep(pst, replica_batches(task, i, bs, args.replicas))
+    t_parle = time.time() - t0
+    avg = parle.average_model(pst)
+    parle_test = float(error_rate(mlp_forward, avg, task.test_batch()))
+    parle_train = float(error_rate(mlp_forward, avg,
+                                   {"x": task.x_train, "y": task.y_train}))
+
+    print(f"{'':14}{'test err':>10}{'train err':>11}{'wall (s)':>10}")
+    print(f"{'SGD':14}{sgd_test:10.4f}{sgd_train:11.4f}{t_sgd:10.1f}")
+    print(f"{'Parle n=' + str(args.replicas):14}"
+          f"{parle_test:10.4f}{parle_train:11.4f}{t_parle:10.1f}")
+    print(f"\nreplica overlap: {float(ensemble.replica_overlap(pst.x)):.4f}"
+          f"   (elastic coupling keeps replicas aligned, paper §1.2)")
+    print(f"scopes at end:  gamma={float(pst.scopes.gamma):.2f} "
+          f"rho={float(pst.scopes.rho):.3f}   (Eq. 9 scoping)")
+    assert parle_test <= sgd_test + 0.02, "Parle should generalize >= SGD"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper §5: splitting the dataset between replicas.
+
+Each Parle replica sees only a disjoint 1/n shard of the training data;
+the ONLY way information crosses shards is the elastic proximal term
+(1/2rho)||x^a - x||^2.  Compares against SGD restricted to one shard
+and SGD with full data (Table 2 of the paper).
+
+    PYTHONPATH=src python examples/split_data.py [--steps 400]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ParleConfig
+from repro.core import parle
+from repro.data.synthetic import TeacherTask, replica_batches
+from repro.models.convnet import (classification_loss, error_rate, init_mlp,
+                                  mlp_forward)
+from repro.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--replicas", type=int, default=2)
+    args = ap.parse_args()
+    n = args.replicas
+
+    task = TeacherTask()
+    loss_raw = classification_loss(mlp_forward)
+    loss_fn = lambda p, b: (loss_raw(p, b)[0], ())
+    bs = 128
+
+    def eval_err(p):
+        return float(error_rate(mlp_forward, p, task.test_batch()))
+
+    # SGD, full data
+    st = sgd.init(init_mlp(jax.random.PRNGKey(0)))
+    step = jax.jit(sgd.make_train_step(loss_fn, 0.1))
+    for i in range(args.steps):
+        st, _ = step(st, task.train_batch(i, bs))
+    err_full = eval_err(st.params)
+
+    # SGD, one shard only (1/n of the data)
+    st = sgd.init(init_mlp(jax.random.PRNGKey(0)))
+    for i in range(args.steps):
+        st, _ = step(st, task.train_batch(i, bs, shard=(0, n)))
+    err_shard = eval_err(st.params)
+
+    # Parle, data split across replicas (shard a -> replica a)
+    pcfg = ParleConfig(n_replicas=n, L=25, lr=0.1, lr_inner=0.1,
+                       batches_per_epoch=task.batches_per_epoch(bs))
+    pst = parle.init(init_mlp(jax.random.PRNGKey(0)), pcfg)
+    pstep = jax.jit(parle.make_train_step(loss_fn, pcfg))
+    for i in range(args.steps):
+        pst, _ = pstep(pst, replica_batches(task, i, bs, n, split=True))
+    err_parle = eval_err(parle.average_model(pst))
+
+    print(f"SGD  full data          : {err_full:.4f}")
+    print(f"SGD  one {100//n}% shard      : {err_shard:.4f}")
+    print(f"Parle n={n}, {100//n}% per rep : {err_parle:.4f}")
+    print("\nThe elastic term pulls shard-limited replicas toward a region"
+          "\nthat works for the union of the shards (paper §5, Table 2).")
+    assert err_parle < err_shard + 0.01
+
+
+if __name__ == "__main__":
+    main()

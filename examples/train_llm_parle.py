@@ -1,0 +1,77 @@
+"""End-to-end driver: Parle-train a ~60M-parameter decoder LM on the
+synthetic token stream for a few hundred steps, checkpointing and
+reporting the replica diagnostics.  This is the deliverable-(b) driver
+scaled to what one CPU core can run; on a TPU slice the identical code
+runs the full assigned configs under a production mesh.
+
+    PYTHONPATH=src python examples/train_llm_parle.py --steps 200
+    (use --steps 5 for a smoke check)
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ModelConfig, ParleConfig
+from repro.core import ensemble, parle
+from repro.data.synthetic import TokenStream, replica_batches
+from repro.models.model import build_model
+
+E2E_CONFIG = ModelConfig(
+    name="e2e-60m", family="dense",
+    num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+    d_ff=1536, vocab_size=32_000, head_dim=64,
+    source="example driver config (~60M params)",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--L", type=int, default=10)
+    ap.add_argument("--checkpoint", default="results/e2e_parle.npz")
+    args = ap.parse_args()
+
+    cfg = E2E_CONFIG
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    nparams = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={nparams/1e6:.1f}M")
+
+    pcfg = ParleConfig(n_replicas=args.replicas, L=args.L, lr=0.05,
+                       lr_inner=0.05, batches_per_epoch=50)
+    state = parle.init(params, pcfg)
+    step = jax.jit(parle.make_train_step(model.loss, pcfg, weight_decay=1e-4))
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         batch_size=args.batch)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = step(state, replica_batches(stream, i, args.batch,
+                                               args.replicas))
+        if (i + 1) % max(args.steps // 10, 1) == 0 or i == 0:
+            print(json.dumps({
+                "step": i + 1, "loss": round(float(m["loss"]), 4),
+                "gamma": round(float(state.scopes.gamma), 2),
+                "rho": round(float(state.scopes.rho), 4),
+                "overlap": round(float(ensemble.replica_overlap(state.x)), 4),
+                "wall_s": round(time.time() - t0, 1)}), flush=True)
+
+    if args.checkpoint:
+        ckpt.save(args.checkpoint, state, step=args.steps,
+                  meta={"config": cfg.name})
+        print(f"checkpoint -> {args.checkpoint}")
+
+    # deployable single model = replica average (paper's end product)
+    avg = parle.average_model(state)
+    eval_loss, _ = jax.jit(model.loss)(avg, stream.batch(999_983))
+    print(json.dumps({"final_avg_model_eval_loss": round(float(eval_loss), 4)}))
+
+
+if __name__ == "__main__":
+    main()

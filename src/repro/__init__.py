@@ -1,0 +1,17 @@
+"""Parle (Chaudhari et al., 2017) as a multi-pod JAX framework.
+
+Public API quick-reference:
+
+    from repro.configs import get_config, smoke_variant, ParleConfig
+    from repro.models.model import build_model
+    from repro.core import parle, elastic_sgd, entropy_sgd
+
+    cfg   = smoke_variant(get_config("llama3-8b"))
+    model = build_model(cfg)
+    state = parle.init(model.init(key), ParleConfig(n_replicas=3))
+    step  = jax.jit(parle.make_train_step(model.loss, pcfg))
+
+Launchers: repro.launch.{train,serve,dryrun}; kernels: repro.kernels.ops.
+"""
+
+__version__ = "1.0.0"

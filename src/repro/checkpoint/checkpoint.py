@@ -1,0 +1,74 @@
+"""Flat-npz pytree checkpointing (no external deps).
+
+Leaves are saved under path-encoded keys; NamedTuple-typed optimizer
+states round-trip through their flattened dict form.  Scalars (step,
+scopes) ride along.  Multi-host note: in a real deployment each host
+writes its addressable shards; here (single host) the full tree is
+gathered and written once.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, step: int = 0, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    sidecar = {"step": int(step), "keys": sorted(flat.keys()),
+               "meta": meta or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(sidecar, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key in flat_like:
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key}")
+        leaves.append(jnp.asarray(data[key]))
+    # rebuild in like's leaf order
+    flat_paths, _ = jax.tree_util.tree_flatten_with_path(like)
+    keyed = {SEP.join(_path_str(p) for p in path): i
+             for i, (path, _) in enumerate(flat_paths)}
+    ordered = [None] * len(leaves)
+    for key, i in keyed.items():
+        ordered[i] = jnp.asarray(data[key])
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
+
+
+def latest_step(path: str) -> int:
+    with open(path + ".json") as f:
+        return json.load(f)["step"]

@@ -1,0 +1,87 @@
+"""Elastic-SGD (Zhang et al., 2015) — Eq. (7) — with the paper's novel
+addition of rho-scoping (§2.4, §4.4).
+
+Unlike Parle, the elastic coupling fires on EVERY step: each worker
+takes a gradient step with the elastic term, and the reference x moves
+toward the replica mean.  Communication: one all-reduce per step —
+the O(2nN) cost Parle amortizes to O(2nN/L).
+
+    x^a <- x^a - lr [grad f(x^a) + (x^a - x)/rho]     (7a), Nesterov mu
+    x   <- x - lr_ref (x - mean_a x^a)                (7b)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoping import Scopes, init_scopes, update_scopes
+from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
+                                tree_zeros_like)
+
+
+class ElasticState(NamedTuple):
+    x: Any            # (n, ...) workers
+    ref: Any          # (...) reference / parameter-server variable
+    v: Any            # (n, ...) Nesterov momentum
+    step: jnp.ndarray
+    scopes: Scopes
+
+
+def init(params, cfg) -> ElasticState:
+    return ElasticState(
+        x=tree_broadcast_axis0(params, cfg.n_replicas),
+        ref=params,
+        v=tree_zeros_like(tree_broadcast_axis0(params, cfg.n_replicas)),
+        step=jnp.zeros((), jnp.int32),
+        scopes=init_scopes(cfg),
+    )
+
+
+def update(state: ElasticState, grads, cfg) -> ElasticState:
+    mu, lr = cfg.momentum, cfg.lr
+    inv_rho = 1.0 / state.scopes.rho
+
+    def upd(x, v, g, r):
+        g_e = g + inv_rho * (x - r[None])
+        v_new = mu * v + g_e
+        return x - lr * (g_e + mu * v_new), v_new
+
+    out = jax.tree.map(upd, state.x, state.v, grads, state.ref)
+    treedef = jax.tree.structure(state.x)
+    leaves = treedef.flatten_up_to(out)
+    x = treedef.unflatten([l[0] for l in leaves])
+    v = treedef.unflatten([l[1] for l in leaves])
+
+    # (7b): x <- x - eta (x - mean_a x^a)   [plain eta, not eta/rho]
+    xbar = tree_mean_axis0(x)                          # the all-reduce
+    ref = jax.tree.map(lambda r, m: r - lr * (r - m), state.ref, xbar)
+
+    # scope rho once per "epoch-equivalent" L steps to mirror Eq. (9)
+    step = state.step + 1
+    scopes = jax.lax.cond(step % cfg.L == 0,
+                          lambda s: update_scopes(s, cfg),
+                          lambda s: s, state.scopes)
+    return ElasticState(x=x, ref=ref, v=v, step=step, scopes=scopes)
+
+
+def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0):
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def step(state: ElasticState, batch):
+        losses, grads = jax.vmap(replica_grad)(state.x, batch)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, state.x)
+        new_state = update(state, grads, cfg)
+        return new_state, {"loss": jnp.mean(losses),
+                           "loss_per_replica": losses,
+                           "rho": new_state.scopes.rho}
+
+    return step
+
+
+def average_model(state: ElasticState):
+    return state.ref

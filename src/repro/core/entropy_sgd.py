@@ -1,0 +1,30 @@
+"""Entropy-SGD (Chaudhari et al., 2016) — Eq. (6).
+
+Exactly Parle with n = 1: the elastic term (x^a - xbar)/rho vanishes
+identically because the replica mean of a single replica is itself
+(§2.1, §3 of the Parle paper).  Implemented as a thin wrapper so the
+equivalence is structural, not re-derived — and is asserted by
+tests/test_core_parle.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import parle
+
+
+def _n1(cfg):
+    return dataclasses.replace(cfg, n_replicas=1, mode="entropy_sgd")
+
+
+def init(params, cfg):
+    return parle.init(params, _n1(cfg))
+
+
+def make_train_step(loss_fn, cfg, weight_decay: float = 0.0, use_kernel: bool = False):
+    return parle.make_train_step(loss_fn, _n1(cfg), weight_decay=weight_decay,
+                                 use_kernel=use_kernel)
+
+
+def average_model(state):
+    return parle.average_model(state)

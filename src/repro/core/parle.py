@@ -1,0 +1,209 @@
+"""Parle (Chaudhari et al., 2017) — Eq. (8a)-(8d) — as a composable JAX
+optimizer transform.
+
+State layout: every leaf carries a leading **replica axis** of size n.
+Locally (CPU tests, single host) the replica axis is just vmapped; on a
+mesh it is sharded over the ``replica``/``pod`` mesh axis, so the single
+cross-replica reduction in ``sync_step`` (the mean of Eq. 8d with
+eta'' = rho/n, §3.1) lowers to one all-reduce over that axis — the ONLY
+cross-replica collective, fired once every L inner steps.  That is the
+paper's O(2nN/L) amortized-communication property, stated in mesh terms.
+
+Updates (Nesterov momentum mu=0.9 per Remark 2, none on the reference):
+
+  inner_step (every step; zero cross-replica traffic):
+    g_y   = grad f(y) + (y - x)/gamma            (8a)
+    v_y  <- mu v_y + g_y ;  y <- y - lr' (g_y + mu v_y)
+    z    <- alpha z + (1-alpha) y                (8b)
+
+  sync_step (when k/L integer; one all-reduce):
+    xbar  = mean_a x^a                           (8d with eta''=rho/n)
+    g_x   = (x - z) + (x - xbar)/rho             (8c; first term already
+                                                  gamma-scaled per Remark 1)
+    v_x  <- mu v_x + g_x ;  x <- x - lr (g_x + mu v_x)
+    y, z <- x  (inner-loop reset);  gamma, rho <- scoping decay (Eq. 9)
+
+Baselines: ``mode="entropy_sgd"`` is exactly Parle with n=1 (the elastic
+term vanishes identically — §2.1/§3); Elastic-SGD lives in
+core/elastic_sgd.py (per-step coupling, Eq. 7).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoping import Scopes, init_scopes, update_scopes
+from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
+                                tree_zeros_like)
+
+
+class ParleState(NamedTuple):
+    x: Any            # (n, ...) replicas x^a
+    y: Any            # (n, ...) inner MCMC-free Entropy-SGD iterate
+    z: Any            # (n, ...) exponential average of y
+    v_y: Any          # (n, ...) Nesterov momentum of y
+    v_x: Any          # (n, ...) Nesterov momentum of x^a
+    step: jnp.ndarray  # () int32, counts inner steps k
+    scopes: Scopes
+
+
+def init(params, cfg) -> ParleState:
+    """``params``: single-model pytree; replicated n_replicas times.
+
+    All replicas start at the same point (the paper initializes each
+    replica from the same random init; diversity comes from data order).
+    """
+    n = cfg.n_replicas
+    x = tree_broadcast_axis0(params, n)
+    return ParleState(
+        x=x, y=x, z=x,
+        v_y=tree_zeros_like(x), v_x=tree_zeros_like(x),
+        step=jnp.zeros((), jnp.int32),
+        scopes=init_scopes(cfg),
+    )
+
+
+def init_from_replicas(replica_params, cfg) -> ParleState:
+    """Start from distinct per-replica params (leading axis n)."""
+    x = replica_params
+    return ParleState(
+        x=x, y=x, z=x,
+        v_y=tree_zeros_like(x), v_x=tree_zeros_like(x),
+        step=jnp.zeros((), jnp.int32),
+        scopes=init_scopes(cfg),
+    )
+
+
+# ------------------------------------------------------------------
+# Inner step (8a)-(8b)
+# ------------------------------------------------------------------
+
+def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> ParleState:
+    """grads: pytree with leading replica axis = grad f(y^a) per replica."""
+    mu, lr = cfg.momentum, cfg.lr_inner
+    inv_gamma = 1.0 / state.scopes.gamma
+    alpha = cfg.alpha
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, z, v_y = kops.parle_inner_update(
+            state.y, state.z, state.v_y, grads, state.x,
+            inv_gamma=inv_gamma, lr=lr, mu=mu, alpha=alpha)
+    else:
+        def upd(y, z, v, g, x):
+            g_y = g + inv_gamma * (y - x)          # (8a) proximal gradient
+            v_new = mu * v + g_y                   # Nesterov
+            y_new = y - lr * (g_y + mu * v_new)
+            z_new = alpha * z + (1.0 - alpha) * y_new   # (8b)
+            return y_new, z_new, v_new
+
+        out = jax.tree.map(upd, state.y, state.z, state.v_y, grads, state.x)
+        treedef = jax.tree.structure(state.y)
+        leaves = treedef.flatten_up_to(out)
+        y = treedef.unflatten([l[0] for l in leaves])
+        z = treedef.unflatten([l[1] for l in leaves])
+        v_y = treedef.unflatten([l[2] for l in leaves])
+
+    return state._replace(y=y, z=z, v_y=v_y, step=state.step + 1)
+
+
+# ------------------------------------------------------------------
+# Sync step (8c)-(8d): the one cross-replica collective
+# ------------------------------------------------------------------
+
+def sync_step(state: ParleState, cfg, axis_name: str | None = None) -> ParleState:
+    mu, lr = cfg.momentum, cfg.lr
+    inv_rho = 1.0 / state.scopes.rho
+    n = cfg.n_replicas
+
+    # (8d) with eta'' = rho/n: the reference IS the replica mean.
+    # Leading-axis mean; under pjit with the replica axis sharded this is
+    # the single all-reduce.  (axis_name path kept for shard_map use.)
+    if axis_name is None:
+        xbar = tree_mean_axis0(state.x)
+        xbar = jax.tree.map(lambda m, x: jnp.broadcast_to(m[None], x.shape),
+                            xbar, state.x)
+    else:
+        xbar = jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), state.x)
+
+    gamma_scale = 1.0 if cfg.scale_lr_by_gamma else 1.0 / state.scopes.gamma
+
+    def upd(x, z, v, xb):
+        g_x = gamma_scale * (x - z) + inv_rho * (x - xb)    # (8c)
+        v_new = mu * v + g_x
+        x_new = x - lr * (g_x + mu * v_new)
+        return x_new, v_new
+
+    out = jax.tree.map(upd, state.x, state.z, state.v_x, xbar)
+    treedef = jax.tree.structure(state.x)
+    leaves = treedef.flatten_up_to(out)
+    x = treedef.unflatten([l[0] for l in leaves])
+    v_x = treedef.unflatten([l[1] for l in leaves])
+
+    return ParleState(
+        x=x, y=x, z=x,                    # reset y,z to x^a (paper: "we
+        v_y=tree_zeros_like(x),           # initialize y to x every L")
+        v_x=v_x,
+        step=state.step,
+        scopes=update_scopes(state.scopes, cfg),
+    )
+
+
+def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> ParleState:
+    """One Parle step: inner update + conditional sync (k/L integer)."""
+    state = inner_step(state, grads, cfg, use_kernel=use_kernel)
+    do_sync = (state.step % cfg.L) == 0
+    return jax.lax.cond(do_sync,
+                        lambda s: sync_step(s, cfg),
+                        lambda s: s,
+                        state)
+
+
+# ------------------------------------------------------------------
+# Train-step factory
+# ------------------------------------------------------------------
+
+def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                    use_kernel: bool = False):
+    """loss_fn(params, batch) -> (scalar, aux).  Returns
+
+        step(state, batch) -> (state, metrics)
+
+    where ``batch`` leaves carry a leading replica axis of size n (each
+    replica sees its own mini-batch — data-parallel *inside* a replica is
+    handled by the mesh ``data`` axis at the sharding layer).
+    """
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def step(state: ParleState, batch):
+        losses, grads = jax.vmap(replica_grad)(state.y, batch)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, state.y)
+        new_state = fused_step(state, grads, cfg, use_kernel=use_kernel)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_replica": losses,
+            "gamma": new_state.scopes.gamma,
+            "rho": new_state.scopes.rho,
+            "step": new_state.step,
+        }
+        return new_state, metrics
+
+    return step
+
+
+def average_model(state: ParleState):
+    """The deployable single model: mean of replicas (what the paper
+    evaluates after scoping collapses the ensemble)."""
+    return tree_mean_axis0(state.x)
+
+
+def replica_model(state: ParleState, a: int):
+    return jax.tree.map(lambda v: v[a], state.x)

@@ -1,0 +1,45 @@
+"""Scoping schedule, Eq. (9) of the paper.
+
+    gamma_k = gamma0 * (1 - 1/(2B))^floor(k/L),  clipped at gamma_min
+    rho_k   = rho0   * (1 - 1/(2B))^floor(k/L),  clipped at rho_min
+
+B = number of mini-batches per epoch.  Both scopes shrink every sync
+(every L inner steps); as gamma, rho -> their floors the replicas
+collapse toward a single flat-minimum configuration (§2.4).  Applying
+scoping to Elastic-SGD is one of the paper's novel claims (§4.4) — the
+same schedule object drives both algorithms here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class Scopes(NamedTuple):
+    gamma: jnp.ndarray   # () f32
+    rho: jnp.ndarray     # () f32
+
+
+def init_scopes(cfg) -> Scopes:
+    return Scopes(gamma=jnp.asarray(cfg.gamma0, jnp.float32),
+                  rho=jnp.asarray(cfg.rho0, jnp.float32))
+
+
+def update_scopes(scopes: Scopes, cfg) -> Scopes:
+    """One multiplicative decay step (called at every sync, i.e. when
+    k/L increments)."""
+    f = cfg.scoping_factor()
+    return Scopes(
+        gamma=jnp.maximum(scopes.gamma * f, cfg.gamma_min),
+        rho=jnp.maximum(scopes.rho * f, cfg.rho_min),
+    )
+
+
+def scopes_at(cfg, num_syncs: int) -> Scopes:
+    """Closed-form value after ``num_syncs`` decays (for tests/logging)."""
+    f = cfg.scoping_factor() ** num_syncs
+    return Scopes(
+        gamma=jnp.maximum(jnp.asarray(cfg.gamma0 * f, jnp.float32), cfg.gamma_min),
+        rho=jnp.maximum(jnp.asarray(cfg.rho0 * f, jnp.float32), cfg.rho_min),
+    )

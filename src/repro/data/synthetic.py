@@ -1,0 +1,132 @@
+"""Synthetic data pipeline (offline container — no real datasets).
+
+Two stream kinds:
+
+* Token streams for the assigned LM architectures: a deterministic
+  bigram-ish Markov source so that models have learnable structure
+  (loss strictly below ln(V) is achievable) and runs are reproducible.
+* Classification streams for the paper-faithful Table 1/2 analogues:
+  a teacher-MLP labelling of Gaussian inputs — a non-convex task with a
+  real generalization gap, which is what Parle's claims are about.
+
+Replica splitting (paper §5): ``split_for_replicas`` partitions the
+underlying sample index space evenly across n replicas, so replica a
+only ever draws from its shard — the only cross-shard information path
+is the elastic term, exactly the experiment in Table 2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------
+# Token streams (LM families)
+# ------------------------------------------------------------------
+
+@dataclass
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    num_codebooks: int = 0        # audio: emit (B, K, T)
+    shard: tuple[int, int] = (0, 1)   # (index, count) — replica split
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # sparse-ish Markov transition table over a reduced state space
+        self._order = rng.permutation(self.vocab_size)
+
+    def batch(self, step: int) -> dict:
+        """Deterministic pseudo-Markov batch for ``step``."""
+        idx, cnt = self.shard
+        key = jax.random.PRNGKey(self.seed * 100003 + step * cnt + idx)
+        shape = ((self.batch_size, self.num_codebooks, self.seq_len + 1)
+                 if self.num_codebooks else
+                 (self.batch_size, self.seq_len + 1))
+        base = jax.random.randint(key, shape, 0, self.vocab_size)
+        # impose structure: next token = (prev * 31 + noise) % V  half the time
+        nxt = (base[..., :-1] * 31 + 7) % self.vocab_size
+        coin = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                    0.5, nxt.shape)
+        seq = jnp.where(coin, nxt, base[..., 1:])
+        seq = jnp.concatenate([base[..., :1], seq], axis=-1)
+        return {"tokens": seq[..., :-1].astype(jnp.int32),
+                "labels": seq[..., 1:].astype(jnp.int32)}
+
+
+# ------------------------------------------------------------------
+# Classification streams (paper-faithful experiments)
+# ------------------------------------------------------------------
+
+@dataclass
+class TeacherTask:
+    """Fixed teacher-MLP labelled Gaussian classification task."""
+    in_dim: int = 64
+    hidden: int = 96
+    num_classes: int = 10
+    num_train: int = 4096
+    num_test: int = 1024
+    seed: int = 0
+    label_noise: float = 0.05
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        w1 = rng.randn(self.in_dim, self.hidden) / np.sqrt(self.in_dim)
+        w2 = rng.randn(self.hidden, self.num_classes) / np.sqrt(self.hidden)
+        xs = rng.randn(self.num_train + self.num_test, self.in_dim).astype(np.float32)
+        logits = np.tanh(xs @ w1) @ w2
+        ys = np.argmax(logits, axis=1)
+        flip = rng.rand(len(ys)) < self.label_noise
+        ys = np.where(flip, rng.randint(0, self.num_classes, len(ys)), ys)
+        self.x_train = jnp.asarray(xs[: self.num_train])
+        self.y_train = jnp.asarray(ys[: self.num_train].astype(np.int32))
+        self.x_test = jnp.asarray(xs[self.num_train:])
+        self.y_test = jnp.asarray(ys[self.num_train:].astype(np.int32))
+
+    # ---- sampling -----------------------------------------------
+    def train_batch(self, step: int, batch_size: int,
+                    shard: tuple[int, int] = (0, 1)) -> dict:
+        """Replica shard (a, n): draw only from the a-th 1/n of the data
+        (paper §5 splitting).  Every sample is in exactly one shard."""
+        a, n = shard
+        per = self.num_train // n
+        lo = a * per
+        rng = np.random.RandomState((step * n + a) * 7919 + 13)
+        idx = lo + rng.randint(0, per, batch_size)
+        return {"x": self.x_train[idx], "y": self.y_train[idx]}
+
+    def test_batch(self) -> dict:
+        return {"x": self.x_test, "y": self.y_test}
+
+    def batches_per_epoch(self, batch_size: int) -> int:
+        return max(1, self.num_train // batch_size)
+
+
+def replica_batches(task_or_stream, step: int, batch_size: int, n_replicas: int,
+                    split: bool = False):
+    """Stack per-replica batches along a leading replica axis.
+
+    split=False: every replica draws from the full data (paper §4).
+    split=True : replica a draws only from shard a (paper §5).
+    """
+    outs = []
+    for a in range(n_replicas):
+        shard = (a, n_replicas) if split else (0, 1)
+        if isinstance(task_or_stream, TeacherTask):
+            b = task_or_stream.train_batch(step * n_replicas + a
+                                           if not split else step,
+                                           batch_size, shard)
+        else:
+            s = task_or_stream
+            s2 = TokenStream(s.vocab_size, s.seq_len, batch_size,
+                             seed=s.seed, num_codebooks=s.num_codebooks,
+                             shard=shard if split else (a, n_replicas))
+            b = s2.batch(step)
+        outs.append(b)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)

@@ -1,0 +1,45 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU
+set REPRO_KERNEL_COMPILE=1 (or pass interpret=False) to compile for
+real.  Models call these through ``use_flash=True`` / ``use_kernel=True``
+flags; the default model path is the pure-XLA reference implementation,
+which is also the correctness oracle.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import parle_update as _pu
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_KERNEL_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, window: int = 0, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int = 128, h0=None):
+    if h0 is not None:
+        # kernel path starts from zero state; fall back to the jnp
+        # chunked implementation when resuming from a prefix state
+        from repro.models.mamba2 import ssd_chunked
+        return ssd_chunked(x, dt, A, B_mat, C_mat, chunk, h0=h0)
+    return _ssd.ssd_scan(x, dt, A, B_mat, C_mat, chunk=chunk,
+                         interpret=_interpret())
+
+
+def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha):
+    return _pu.parle_update_tree(y, z, v, g, x, inv_gamma=inv_gamma,
+                                 lr=lr, mu=mu, alpha=alpha,
+                                 interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are asserted against
+(tests/test_kernels_*.py sweep shapes and dtypes).  They are written in
+the most direct form available — e.g. the SSD oracle is the O(T) naive
+recurrence, deliberately NOT the chunked algorithm the kernel uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------
+# parle_update: fused Eq. (8a)-(8b) elementwise update
+# ------------------------------------------------------------------
+
+def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha):
+    """One fused Parle inner step on flat arrays.
+
+    g_y = g + inv_gamma * (y - x)
+    v'  = mu v + g_y
+    y'  = y - lr (g_y + mu v')
+    z'  = alpha z + (1 - alpha) y'
+    Returns (y', z', v').
+    """
+    g_y = g + inv_gamma * (y - x)
+    v_new = mu * v + g_y
+    y_new = y - lr * (g_y + mu * v_new)
+    z_new = alpha * z + (1.0 - alpha) * y_new
+    return y_new, z_new, v_new
+
+
+# ------------------------------------------------------------------
+# flash_attention: causal (optionally sliding-window) MHA
+# ------------------------------------------------------------------
+
+def flash_attention(q, k, v, window: int = 0):
+    """q, k, v: (B, T, H, hd) — post-GQA-expansion.  Causal softmax."""
+    T = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ------------------------------------------------------------------
+# ssd_scan: naive O(T) selective-scan recurrence
+# ------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B_mat, C_mat, h0=None):
+    """Naive recurrence oracle.
+
+    x: (B, T, nh, P); dt: (B, T, nh); A: (nh,); B/C: (B, T, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t;  y_t = C_t . h_t
+    Returns y: (B, T, nh, P), h_final: (B, nh, N, P).
+    """
+    Bsz, T, nh, P = x.shape
+    N = B_mat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, N, P), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # (B,nh,P), (B,nh), (B,N), (B,N)
+        a = jnp.exp(dtt * A)           # (B, nh)
+        dBx = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt)
+        h_new = a[:, :, None, None] * h + dBx
+        y = jnp.einsum("bn,bhnp->bhp", ct, h_new)
+        return h_new, y
+
+    inps = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(B_mat, 1, 0), jnp.moveaxis(C_mat, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                               jax.tree.map(lambda a: a.astype(jnp.float32), inps))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final.astype(x.dtype)

@@ -1,0 +1,123 @@
+"""Chunked SSD (Mamba2) selective scan as a Pallas TPU kernel.
+
+Mapping of the SSD algorithm to TPU:
+ * grid = (B, nh, num_chunks); the chunk axis is sequential
+   ("arbitrary") — the running SSM state h (N x P) is carried across
+   chunk iterations in a VMEM scratch buffer, so the inter-chunk
+   recurrence never leaves VMEM.
+ * Within a chunk everything is dense matmul work for the MXU: the
+   (Q x Q) decay-masked score matrix, the (Q x N) x (N x P) state
+   readout, the (N x Q) x (Q x P) state update.  Q = chunk length
+   (default 128, MXU-aligned).
+ * B/C are single-group (shared across heads) — blocked per (b, chunk)
+   and broadcast over the head grid axis.
+
+Oracle: kernels/ref.py::ssd_scan (the NAIVE O(T) recurrence, so the
+kernel and the pure-jnp chunked path in models/mamba2.py are validated
+against an independent formulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr,
+            *, chunk, nstate, hdim):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    A = a_ref[0]                                   # ()
+    Bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    log_a = dt * A                                 # (Q,), negative
+    cum = jnp.cumsum(log_a)                        # inclusive
+
+    # intra-chunk: scores[i, j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j<=i
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    delta = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(delta), 0.0)
+    scores = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    # inter-chunk: y += (C exp(cum)) @ h_prev
+    h_prev = h_scr[...]                            # (N, P)
+    c_decay = Cm * jnp.exp(cum)[:, None]           # (Q, N)
+    y = y + jax.lax.dot_general(c_decay, h_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: h = exp(cum_last) h_prev + sum_j w_j B_j (x) x_j
+    w = jnp.exp(cum[-1] - cum) * dt                # (Q,)
+    bw = Bm * w[:, None]                           # (Q, N)
+    h_new = jnp.exp(cum[-1]) * h_prev + jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int = 128, interpret: bool = True):
+    """x: (B, T, nh, P); dt: (B, T, nh); A: (nh,); B/C: (B, T, N).
+    Returns y: (B, T, nh, P), h_final: (B, nh, N, P).
+
+    Note: final state is recomputed by a cheap jnp epilogue (the kernel
+    streams y); training only needs y — prefill uses the jnp path.
+    """
+    Bsz, T, nh, P = x.shape
+    N = B_mat.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+    grid = (Bsz, nh, nc)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=Q, nstate=N, hdim=P),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B_mat, C_mat)
+
+    # epilogue: final chunk states via the closed-form per-chunk sums
+    log_a = dt * A[None, None, :]
+    cum = jnp.cumsum(log_a.reshape(Bsz, nc, Q, nh), axis=2)
+    last = cum[:, :, -1:, :]
+    w = jnp.exp(last - cum) * dt.reshape(Bsz, nc, Q, nh)
+    s_local = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w,
+                         B_mat.reshape(Bsz, nc, Q, N),
+                         x.reshape(Bsz, nc, Q, nh, P))
+    cd = jnp.exp(last[:, :, 0, :])                 # (B, nc, nh)
+
+    def scan_body(h, inp):
+        s, c = inp
+        return c[:, :, None, None] * h + s, None
+
+    h0 = jnp.zeros((Bsz, nh, N, P), jnp.float32)
+    h_final, _ = jax.lax.scan(
+        scan_body, h0, (jnp.moveaxis(s_local.astype(jnp.float32), 1, 0),
+                        jnp.moveaxis(cd.astype(jnp.float32), 1, 0)))
+    return y, h_final.astype(x.dtype)

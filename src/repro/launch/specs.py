@@ -1,0 +1,203 @@
+"""ShapeDtypeStruct input specs + PartitionSpec trees for every
+(architecture x input-shape) pair — the dry-run's contract.
+
+No device allocation happens here: parameters come from
+``jax.eval_shape(model.init, ...)``, batches are ShapeDtypeStructs, and
+caches come from ``jax.eval_shape(model.init_cache, ...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import parle as parle_mod
+from repro.models import attention as attn_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models.model import build_model
+from repro.sharding import partition
+
+DATA, MODEL = partition.DATA, partition.MODEL
+
+# the four assigned input shapes
+INPUT_SHAPES = {
+    "train_4k":    dict(kind="train",   seq_len=4_096,   global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32_768,  global_batch=32),
+    "decode_32k":  dict(kind="decode",  seq_len=32_768,  global_batch=128),
+    "long_500k":   dict(kind="decode",  seq_len=524_288, global_batch=1),
+}
+
+LONG_CONTEXT_WINDOW = 8_192     # sliding window for attention archs @ 500k
+
+
+def adapt_for_shape(cfg, shape_name: str):
+    """long_500k requires sub-quadratic attention: attention-bearing
+    families switch to the sliding-window variant (DESIGN.md §5);
+    ssm needs nothing (constant-state decode)."""
+    if shape_name == "long_500k" and cfg.family != "ssm" and cfg.num_heads > 0:
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ------------------------------------------------------------------
+# Batch ShapeDtypeStructs
+# ------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg, seq_len: int, per_replica_batch: int,
+                      n_replicas: int, dtype=jnp.bfloat16):
+    """Batch leaves carry a leading replica axis (even for n=1)."""
+    n, B, T = n_replicas, per_replica_batch, seq_len
+    if cfg.family == "audio":
+        b = {"tokens": _sds((n, B, cfg.num_codebooks, T), jnp.int32),
+             "labels": _sds((n, B, cfg.num_codebooks, T), jnp.int32),
+             "cond": _sds((n, B, cfg.cond_len, cfg.d_model), dtype)}
+    elif cfg.family == "vlm":
+        b = {"tokens": _sds((n, B, T), jnp.int32),
+             "labels": _sds((n, B, T), jnp.int32),
+             "patch_embeds": _sds((n, B, cfg.num_patches, cfg.d_model), dtype)}
+    else:
+        b = {"tokens": _sds((n, B, T), jnp.int32),
+             "labels": _sds((n, B, T), jnp.int32)}
+    return b
+
+
+def prefill_batch_specs(cfg, seq_len: int, batch: int, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return {"tokens": _sds((batch, cfg.num_codebooks, seq_len), jnp.int32),
+                "cond": _sds((batch, cfg.cond_len, cfg.d_model), dtype)}
+    if cfg.family == "vlm":
+        return {"tokens": _sds((batch, seq_len), jnp.int32),
+                "patch_embeds": _sds((batch, cfg.num_patches, cfg.d_model), dtype)}
+    return {"tokens": _sds((batch, seq_len), jnp.int32)}
+
+
+def decode_batch_specs(cfg, batch: int):
+    if cfg.family == "audio":
+        return {"tokens": _sds((batch, cfg.num_codebooks, 1), jnp.int32)}
+    return {"tokens": _sds((batch, 1), jnp.int32)}
+
+
+def batch_pspec_tree(batch_sds, mesh: Mesh, replica_axis: Optional[str],
+                     has_replica_axis: bool, batch_axes=(DATA,)):
+    """batch_axes=("data","model") shards the batch over BOTH mesh axes
+    (the dp_only policy — no tensor parallelism)."""
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape.get(a, 1)
+    baxes = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec(leaf):
+        shape = leaf.shape
+        lead, off = ([], 0)
+        if has_replica_axis:
+            lead, off = [replica_axis], 1
+        b = shape[off]
+        bspec = baxes if (b % size == 0 and b >= size) else None
+        return P(*lead, bspec, *([None] * (len(shape) - off - 1)))
+
+    return jax.tree.map(spec, batch_sds)
+
+
+# ------------------------------------------------------------------
+# Parameter / Parle-state / cache specs
+# ------------------------------------------------------------------
+
+def param_shapes(cfg, dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), dtype))
+
+
+def parle_state_shapes(cfg, pcfg, dtype=jnp.bfloat16):
+    return _parle_state_sds(param_shapes(cfg, dtype), pcfg)
+
+
+def _parle_state_sds(p_sds, pcfg):
+    n = pcfg.n_replicas
+    rep = jax.tree.map(lambda s: _sds((n,) + s.shape, s.dtype), p_sds)
+    from repro.core.scoping import Scopes
+    return parle_mod.ParleState(
+        x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
+        step=_sds((), jnp.int32),
+        scopes=Scopes(gamma=_sds((), jnp.float32), rho=_sds((), jnp.float32)),
+    )
+
+
+def parle_state_pspecs(cfg, p_sds, replica_axis: Optional[str],
+                       policy: str = "fsdp_tp"):
+    base = partition.param_pspecs(p_sds, policy=policy)
+    rep = partition.prepend_axis(base, replica_axis)
+    from repro.core.scoping import Scopes
+    return parle_mod.ParleState(
+        x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
+        step=P(), scopes=Scopes(gamma=P(), rho=P()),
+    )
+
+
+def cache_shapes(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    p_sds = param_shapes(cfg, dtype)
+    return jax.eval_shape(lambda p: model.init_cache(p, batch, max_len, dtype), p_sds)
+
+
+def cache_pspecs(cfg, cache_sds, mesh: Mesh):
+    """Explicit per-family cache partition specs.
+
+    pjit ARGUMENT shardings must divide evenly, so the model-parallel
+    axis lands on the first of {kv_heads, head_dim} that the mesh size
+    divides (GQA kv counts like 8 or 2 don't divide a 16-wide model
+    axis; head_dim 64/128 always does)."""
+    data_size = mesh.shape.get(DATA, 1)
+    model_size = mesh.shape.get(MODEL, 1)
+
+    def bspec(b):
+        return DATA if (b % data_size == 0 and b >= data_size) else None
+
+    def mspec(n):
+        return MODEL if (n % model_size == 0 and n >= model_size) else None
+
+    def kv_spec(c):      # KVCache with leading layer/site axis
+        _, b, _, kv, hd = c.k.shape
+        if mspec(kv):
+            spec = P(None, bspec(b), None, MODEL, None)
+        elif mspec(hd):
+            spec = P(None, bspec(b), None, None, MODEL)
+        else:
+            spec = P(None, bspec(b), None, None, None)
+        return attn_mod.KVCache(k=spec, v=spec, pos=P())
+
+    def ssm_spec(c):     # SSMCache
+        _, b, nh, N, Pdim = c.state.shape
+        if mspec(nh):
+            sspec = P(None, bspec(b), MODEL, None, None)
+        elif mspec(Pdim):
+            sspec = P(None, bspec(b), None, None, MODEL)
+        else:
+            sspec = P(None, bspec(b), None, None, None)
+        conv_c = c.conv.shape[-1]
+        cspec = P(None, bspec(c.conv.shape[1]), None, mspec(conv_c))
+        return ssm_mod.SSMCache(conv=cspec, state=sspec, pos=P())
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return kv_spec(cache_sds)
+    if cfg.family == "ssm":
+        return ssm_spec(cache_sds)
+    if cfg.family == "hybrid":
+        return hybrid_mod.HybridCache(
+            ssm=ssm_spec(cache_sds.ssm),
+            kv=kv_spec(cache_sds.kv),
+            pos=P())
+    raise ValueError(cfg.family)
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

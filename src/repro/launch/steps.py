@@ -1,0 +1,93 @@
+"""Step functions shared by the trainer, the server, and the dry-run.
+
+ * ``make_parle_steps``  — inner_step (8a-8b; no cross-replica traffic),
+   sync_step (8c-8d; the single cross-replica all-reduce), and the fused
+   per-step function used by the training loop.
+ * ``make_sgd_step``     — the data-parallel SGD baseline (paper §4
+   comparison; also the paper-faithful Goyal-style baseline program).
+ * ``make_prefill_step`` / ``make_decode_step`` — serving programs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import parle as parle_mod
+from repro.models.model import build_model
+from repro.optim import sgd as sgd_mod
+
+
+def make_loss_fn(cfg, use_flash: bool = False, remat: bool = False):
+    model = build_model(cfg, use_flash=use_flash, remat=remat)
+    return model.loss
+
+
+def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,
+                     use_flash: bool = False, remat: bool = False,
+                     use_kernel: bool = False):
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def inner_step(state, batch):
+        """(8a)-(8b): per-replica grad + fused update. Cross-replica: NONE
+        (the grad all-reduce over "data" is *intra*-replica)."""
+        losses, grads = jax.vmap(replica_grad)(state.y, batch)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, state.y)
+        new_state = parle_mod.inner_step(state, grads, pcfg,
+                                         use_kernel=use_kernel)
+        return new_state, {"loss": jnp.mean(losses)}
+
+    def sync_step(state):
+        """(8c)-(8d): the one all-reduce over the replica axis."""
+        return parle_mod.sync_step(state, pcfg)
+
+    def fused_step(state, batch):
+        losses, grads = jax.vmap(replica_grad)(state.y, batch)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, state.y)
+        new_state = parle_mod.fused_step(state, grads, pcfg,
+                                         use_kernel=use_kernel)
+        return new_state, {"loss": jnp.mean(losses),
+                           "gamma": new_state.scopes.gamma,
+                           "rho": new_state.scopes.rho}
+
+    return inner_step, sync_step, fused_step
+
+
+def make_sgd_step(cfg, lr=0.1, momentum=0.9, weight_decay: float = 0.0,
+                  use_flash: bool = False, remat: bool = False):
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
+    return sgd_mod.make_train_step(loss_fn, lr, momentum=momentum,
+                                   weight_decay=weight_decay)
+
+
+def make_prefill_step(cfg, use_flash: bool = False):
+    model = build_model(cfg, use_flash=use_flash)
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    model = build_model(cfg)
+
+    def decode(params, batch, cache):
+        logits, cache = model.decode(params, batch, cache)
+        if cfg.family == "audio":
+            next_tok = jnp.argmax(logits[:, -1], axis=-1)       # (B, K)
+            next_tok = next_tok[:, :, None].astype(jnp.int32)   # (B, K, 1)
+        else:
+            next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, cache
+
+    return decode

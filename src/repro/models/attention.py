@@ -1,0 +1,210 @@
+"""Grouped-query attention with RoPE, optional QKV bias, sliding window,
+and a rolling KV cache for decode.
+
+The inner product-softmax-product is factored into ``attention_core`` so
+the Pallas flash-attention kernel can be swapped in (``use_flash=True``);
+the default is the pure-XLA einsum path (also the oracle for the kernel).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S, KV, hd) — S = sliding_window if windowed
+    v: jax.Array        # (B, S, KV, hd)
+    pos: jax.Array      # () int32 — number of tokens already absorbed
+
+
+def init_attn_params(key, cfg, dtype=jnp.float32):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _repeat_kv(x, groups: int):
+    """(B, T, KV, hd) -> (B, T, KV*groups, hd)."""
+    if groups == 1:
+        return x
+    b, t, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, t, kv, groups, hd))
+    return x.reshape(b, t, kv * groups, hd)
+
+
+# query-chunking threshold: above this T the O(T^2) logits tensor is
+# never materialized whole (XLA analogue of flash for the dry-run path)
+CHUNKED_THRESHOLD = 2048
+CHUNK_Q = 1024
+
+
+def attention_core(q, k, v, mask, use_flash: bool = False,
+                   window: int = 0, causal: bool = True):
+    """q: (B, Tq, H, hd); k/v: (B, Tk, H, hd); mask: (B|1, 1, Tq, Tk) bool.
+
+    Returns (B, Tq, H, hd).
+    """
+    if use_flash and causal and q.shape[1] == k.shape[1]:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, window=window)
+    if causal and q.shape[1] == k.shape[1] and q.shape[1] > CHUNKED_THRESHOLD:
+        return chunked_attention(q, k, v, window=window)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, window: int = 0, chunk: int = 0):
+    """Memory-efficient causal attention: scan over query chunks so the
+    (Tq, Tk) logits tensor is materialized one (chunk, Tk) slab at a
+    time.  Pure XLA — this is what the full-size dry-run configs lower
+    (the Pallas flash kernel is the TPU-native equivalent).
+
+    Chunk size: REPRO_CHUNK_Q env > explicit arg > CHUNK_Q default (the
+    dry-run uses 4096 to bound unrolled-HLO size; see launch/dryrun.py).
+    """
+    import os
+    if chunk == 0:
+        chunk = int(os.environ.get("REPRO_CHUNK_Q", CHUNK_Q))
+    B, T, H, hd = q.shape
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2                  # largest power-of-two divisor fallback
+    scale = hd ** -0.5
+    nq = T // chunk
+    qc = q.reshape(B, nq, chunk, H, hd)
+    k_pos = jnp.arange(T)
+
+    def body(_, inp):
+        qi, i = inp                                 # (B, chunk, H, hd), ()
+        q_pos = i * chunk + jnp.arange(chunk)
+        m = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            m &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32) * scale
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return (), jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    from repro.utils.scan import layer_unroll
+    _, out = jax.lax.scan(body, (), (jnp.moveaxis(qc, 1, 0),
+                                     jnp.arange(nq)), unroll=layer_unroll())
+    return jnp.moveaxis(out, 0, 1).reshape(B, T, H, hd)
+
+
+def causal_mask(t_q: int, t_k: int, window: int = 0, offset: int = 0):
+    """(1, 1, Tq, Tk) bool. ``offset`` = t_k - t_q for cached prefixes."""
+    q_pos = jnp.arange(t_q)[:, None] + offset
+    k_pos = jnp.arange(t_k)[None, :]
+    m = k_pos <= q_pos
+    if window > 0:
+        m &= k_pos > q_pos - window
+    return m[None, None]
+
+
+def attn_forward(params, cfg, x, positions, use_flash=False):
+    """Full-sequence (training / prefill) attention.
+
+    x: (B, T, d); positions: (B, T) int32.  Returns (B, T, d).
+    """
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,de->bte", x, params["wq"])
+    k = jnp.einsum("btd,de->bte", x, params["wk"])
+    v = jnp.einsum("btd,de->bte", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    mask = causal_mask(T, T, window=cfg.sliding_window)
+    o = attention_core(q, k, v, mask, use_flash=use_flash,
+                       window=cfg.sliding_window)
+    return jnp.einsum("bte,ed->btd", o.reshape(B, T, H * hd), params["wo"])
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> KVCache:
+    S = cfg.sliding_window if cfg.sliding_window else max_len
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, S, KV, hd), dtype),
+        v=jnp.zeros((batch, S, KV, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def attn_prefill(params, cfg, x, positions, cache: KVCache, use_flash=False):
+    """Run full attention over a prompt AND populate the cache."""
+    B, T, _ = x.shape
+    out = attn_forward(params, cfg, x, positions, use_flash=use_flash)
+    k = jnp.einsum("btd,de->bte", x, params["wk"])
+    v = jnp.einsum("btd,de->bte", x, params["wv"])
+    if cfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = apply_rope(k.reshape(B, T, KV, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, T, KV, hd)
+    S = cache.k.shape[1]
+    if T >= S:
+        # keep only the last S tokens, placed so token p sits at slot p % S
+        # (ring-buffer invariant shared with attn_decode)
+        new_k = jnp.roll(k[:, -S:], shift=T % S, axis=1)
+        new_v = jnp.roll(v[:, -S:], shift=T % S, axis=1)
+    else:
+        new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+    return out, KVCache(new_k, new_v, cache.pos + T)
+
+
+def attn_decode(params, cfg, x, cache: KVCache):
+    """One-token decode.  x: (B, 1, d).  Rolling window if configured."""
+    B, _, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    S = cache.k.shape[1]
+    pos = cache.pos                                        # () int32
+    q = jnp.einsum("btd,de->bte", x, params["wq"])
+    k = jnp.einsum("btd,de->bte", x, params["wk"])
+    v = jnp.einsum("btd,de->bte", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q = apply_rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, 1, KV, hd), posb, cfg.rope_theta)
+    v = v.reshape(B, 1, KV, hd)
+
+    if cfg.sliding_window:
+        slot = pos % S          # rolling ring buffer
+    else:
+        slot = jnp.minimum(pos, S - 1)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    kk = _repeat_kv(ck, H // KV)
+    vv = _repeat_kv(cv, H // KV)
+    # valid slots: with a rolling window every slot < min(pos+1, S) is live
+    live = jnp.arange(S)[None, None, None, :] < jnp.minimum(pos + 1, S)
+    o = attention_core(q, kk, vv, live, causal=False)
+    out = jnp.einsum("bte,ed->btd", o.reshape(B, 1, H * hd), params["wo"])
+    return out, KVCache(ck, cv, pos + 1)

@@ -1,0 +1,84 @@
+"""Small classifiers for the paper-faithful Parle experiments.
+
+The paper's benchmarks use LeNet / All-CNN / WRN on MNIST/CIFAR.  The
+container is offline, so the Table 1 / Table 2 analogues run these
+scaled-down models on synthetic image-classification streams (see
+data/synthetic.py) — what is validated is the *relative ordering* of
+Parle vs Elastic-SGD vs Entropy-SGD vs SGD under matched budgets.
+
+``allcnn``: All-CNN-C-style (Springenberg et al., 2014) — conv stacks,
+stride-2 downsampling convs, global average pooling, no FC layers.
+``mlp``: a cheap 3-layer MLP for fast unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy, dense_init
+
+
+def _conv_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def _conv(x, w, b, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def init_allcnn(key, num_classes=10, channels=(32, 64), in_ch=3, dtype=jnp.float32):
+    """Reduced All-CNN: [conv3-c1, conv3-c1-s2, conv3-c2, conv3-c2-s2, conv1-cls]."""
+    c1, c2 = channels
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": {"w": _conv_init(ks[0], (3, 3, in_ch, c1), dtype), "b": jnp.zeros((c1,), dtype)},
+        "c2": {"w": _conv_init(ks[1], (3, 3, c1, c1), dtype), "b": jnp.zeros((c1,), dtype)},
+        "c3": {"w": _conv_init(ks[2], (3, 3, c1, c2), dtype), "b": jnp.zeros((c2,), dtype)},
+        "c4": {"w": _conv_init(ks[3], (3, 3, c2, c2), dtype), "b": jnp.zeros((c2,), dtype)},
+        "cls": {"w": _conv_init(ks[4], (1, 1, c2, num_classes), dtype),
+                "b": jnp.zeros((num_classes,), dtype)},
+    }
+
+
+def allcnn_forward(params, x):
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    h = jax.nn.relu(_conv(x, params["c1"]["w"], params["c1"]["b"]))
+    h = jax.nn.relu(_conv(h, params["c2"]["w"], params["c2"]["b"], stride=2))
+    h = jax.nn.relu(_conv(h, params["c3"]["w"], params["c3"]["b"]))
+    h = jax.nn.relu(_conv(h, params["c4"]["w"], params["c4"]["b"], stride=2))
+    h = _conv(h, params["cls"]["w"], params["cls"]["b"])
+    return jnp.mean(h, axis=(1, 2))
+
+
+def init_mlp(key, in_dim=64, hidden=128, num_classes=10, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (in_dim, hidden), dtype=dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": dense_init(ks[1], (hidden, hidden), dtype=dtype),
+        "b2": jnp.zeros((hidden,), dtype),
+        "w3": dense_init(ks[2], (hidden, num_classes), dtype=dtype),
+        "b3": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def mlp_forward(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def classification_loss(forward_fn):
+    def loss(params, batch):
+        logits = forward_fn(params, batch["x"])
+        return cross_entropy(logits, batch["y"]), logits
+    return loss
+
+
+def error_rate(forward_fn, params, batch):
+    logits = forward_fn(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) != batch["y"]).astype(jnp.float32))

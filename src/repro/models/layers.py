@@ -1,0 +1,109 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", silu(g) * u, w_down)
+
+
+# ------------------------------------------------------------------
+# Rotary position embeddings
+# ------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+def chunked_cross_entropy(h, head_w, labels, chunk: int = 512,
+                          num_streams: int = 0):
+    """Mean next-token CE computed in T-chunks so the (B, T, V) logits
+    tensor is never materialized whole (V can be 200k+).
+
+    h: (B, T, d); head_w: (d, V) or (d, K*V); labels: (B, T) or (B, T, K)
+    with ``num_streams=K`` for multi-codebook (audio) heads.
+    The scan body is rematerialized so backward memory is O(B*chunk*V).
+    """
+    B, T, d = h.shape
+    if T % chunk:
+        chunk = T                       # degenerate: single chunk
+    nc = T // chunk
+    hc = h.reshape(B, nc, chunk, d)
+    if num_streams:
+        lc = labels.reshape(B, nc, chunk, num_streams)
+    else:
+        lc = labels.reshape(B, nc, chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hh, ll = inp                    # (B, c, d), (B, c[, K])
+        logits = jnp.einsum("bcd,dv->bcv", hh, head_w).astype(jnp.float32)
+        if num_streams:
+            V = head_w.shape[1] // num_streams
+            logits = logits.reshape(logits.shape[0], logits.shape[1],
+                                    num_streams, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    from repro.utils.scan import layer_unroll
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+                            unroll=layer_unroll())
+    denom = B * T * (num_streams if num_streams else 1)
+    return total / denom
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE.  logits: (..., V); labels: (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

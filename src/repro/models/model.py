@@ -1,0 +1,144 @@
+"""Family dispatch: a uniform Model API over all six architecture
+families.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux = model.apply(params, batch)          # training forward
+    loss, aux  = model.loss(params, batch)
+    cache      = model.init_cache(params, batch_size, max_len)
+    logits, cache = model.prefill(params, batch, cache)
+    logits, cache = model.decode(params, batch, cache)
+
+``batch`` is a dict; keys per family (see data/synthetic.py and
+launch/specs.py):
+    dense/moe/ssm/hybrid : tokens, labels
+    vlm                  : tokens, labels, patch_embeds
+    audio                : tokens (B,K,T), labels (B,K,T), cond
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import audio as audio_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models import transformer as tfm
+from repro.models import vlm as vlm_mod
+from repro.models.layers import chunked_cross_entropy, cross_entropy
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    apply: Callable              # (params, batch) -> (logits, aux)
+    loss: Callable               # (params, batch) -> (scalar, aux)
+    init_cache: Callable         # (params, batch_size, max_len) -> cache
+    prefill: Callable            # (params, batch, cache) -> (logits, cache)
+    decode: Callable             # (params, batch, cache) -> (logits, cache)
+
+
+def _lm_loss(hidden_fn, cfg):
+    """Hidden-states + T-chunked CE: the (B, T, V) logits tensor is
+    never materialized (V reaches 202k for llama4-scout)."""
+    def loss(params, batch):
+        h, aux = hidden_fn(params, batch)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        ce = chunked_cross_entropy(h, head, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss
+
+
+def _audio_loss(hidden_fn, cfg):
+    def loss(params, batch):
+        h, aux = hidden_fn(params, batch)            # (B, T, d)
+        labels = batch["labels"].transpose(0, 2, 1)  # (B, T, K)
+        ce = chunked_cross_entropy(h, params["head"], labels,
+                                   num_streams=cfg.num_codebooks)
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss
+
+
+def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        apply_fn = lambda p, b: tfm.forward(p, cfg, b["tokens"],
+                                            use_flash=use_flash, remat=remat)
+        hidden_fn = lambda p, b: tfm.forward_hidden(p, cfg, b["tokens"],
+                                                    use_flash=use_flash, remat=remat)
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: tfm.init_params(key, cfg, dtype),
+            apply=apply_fn,
+            loss=_lm_loss(hidden_fn, cfg),
+            init_cache=lambda p, bs, ml, dtype=jnp.float32: tfm.init_cache(p, cfg, bs, ml, dtype),
+            prefill=lambda p, b, c: tfm.prefill(p, cfg, b["tokens"], c, use_flash=use_flash),
+            decode=lambda p, b, c: tfm.decode_step(p, cfg, b["tokens"], c),
+        )
+
+    if fam == "ssm":
+        apply_fn = lambda p, b: ssm_mod.forward(p, cfg, b["tokens"], remat=remat)
+        hidden_fn = lambda p, b: ssm_mod.forward_hidden(p, cfg, b["tokens"], remat=remat)
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: ssm_mod.init_params(key, cfg, dtype),
+            apply=apply_fn,
+            loss=_lm_loss(hidden_fn, cfg),
+            init_cache=lambda p, bs, ml, dtype=jnp.float32: ssm_mod.init_cache(cfg, bs, dtype),
+            prefill=lambda p, b, c: ssm_mod.prefill(p, cfg, b["tokens"], c),
+            decode=lambda p, b, c: ssm_mod.decode_step(p, cfg, b["tokens"], c),
+        )
+
+    if fam == "hybrid":
+        apply_fn = lambda p, b: hybrid_mod.forward(p, cfg, b["tokens"],
+                                                   remat=remat, use_flash=use_flash)
+        hidden_fn = lambda p, b: hybrid_mod.forward_hidden(p, cfg, b["tokens"],
+                                                           remat=remat, use_flash=use_flash)
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: hybrid_mod.init_params(key, cfg, dtype),
+            apply=apply_fn,
+            loss=_lm_loss(hidden_fn, cfg),
+            init_cache=lambda p, bs, ml, dtype=jnp.float32: hybrid_mod.init_cache(cfg, bs, ml, dtype),
+            prefill=lambda p, b, c: hybrid_mod.prefill(p, cfg, b["tokens"], c, use_flash=use_flash),
+            decode=lambda p, b, c: hybrid_mod.decode_step(p, cfg, b["tokens"], c),
+        )
+
+    if fam == "vlm":
+        apply_fn = lambda p, b: vlm_mod.forward(p, cfg, b["tokens"], b["patch_embeds"],
+                                                use_flash=use_flash, remat=remat)
+        hidden_fn = lambda p, b: vlm_mod.forward_hidden(p, cfg, b["tokens"],
+                                                        b["patch_embeds"],
+                                                        use_flash=use_flash, remat=remat)
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: vlm_mod.init_params(key, cfg, dtype),
+            apply=apply_fn,
+            loss=_lm_loss(hidden_fn, cfg),
+            init_cache=lambda p, bs, ml, dtype=jnp.float32: vlm_mod.init_cache(p, cfg, bs, ml, dtype),
+            prefill=lambda p, b, c: vlm_mod.prefill(p, cfg, b["tokens"], b["patch_embeds"], c),
+            decode=lambda p, b, c: vlm_mod.decode_step(p, cfg, b["tokens"], c),
+        )
+
+    if fam == "audio":
+        apply_fn = lambda p, b: audio_mod.forward(p, cfg, b["tokens"], b.get("cond"),
+                                                  use_flash=use_flash, remat=remat)
+        hidden_fn = lambda p, b: audio_mod.forward_hidden(p, cfg, b["tokens"],
+                                                          b.get("cond"),
+                                                          use_flash=use_flash, remat=remat)
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: audio_mod.init_params(key, cfg, dtype),
+            apply=apply_fn,
+            loss=_audio_loss(hidden_fn, cfg),
+            init_cache=lambda p, bs, ml, dtype=jnp.float32: audio_mod.init_cache(p, cfg, bs, ml, dtype),
+            prefill=lambda p, b, c: audio_mod.prefill(p, cfg, b["tokens"], c, cond=b.get("cond")),
+            decode=lambda p, b, c: audio_mod.decode_step(p, cfg, b["tokens"], c, cond=None),
+        )
+
+    raise ValueError(f"unknown family: {fam}")

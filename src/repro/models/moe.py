@@ -1,0 +1,335 @@
+"""Mixture-of-experts MLP with top-k token-choice routing.
+
+Dispatch is sort-based (Megablocks/MaxText-style) rather than the GShard
+one-hot einsum: tokens are sorted by assigned expert, bucketed into an
+(E, C, d) buffer under a capacity limit, pushed through a batched SwiGLU
+einsum, and combined back with their gate weights.  This keeps dispatch
+FLOPs negligible (gather/scatter only) so the roofline compute term
+reflects *active* expert FLOPs — important for llama4-scout (16e top-1)
+and qwen2-moe (60e top-4).
+
+Sharding: the expert axis of the (E, ...) weights is tensor-parallel
+(mesh "model" axis); tokens ride the "data" axis.  Under pjit the
+scatter/gather between the two lowers to all-to-all-style collectives —
+recorded by the dry-run.
+
+A switch-transformer load-balance auxiliary loss keeps routers from
+collapsing (weight ``cfg.router_aux_weight``); Parle's elastic coupling
+is what keeps the *replicas'* routers aligned (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, silu
+
+
+def init_moe_params(key, cfg, dtype=jnp.float32):
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=dtype),
+        "w_gate": dense_init(ks[1], (E, d, ff), in_axis=-2, dtype=dtype),
+        "w_up": dense_init(ks[2], (E, d, ff), in_axis=-2, dtype=dtype),
+        "w_down": dense_init(ks[3], (E, ff, d), in_axis=-2, dtype=dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        sff = cfg.shared_expert_d_ff
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (d, sff), dtype=dtype),
+            "w_up": dense_init(k2, (d, sff), dtype=dtype),
+            "w_down": dense_init(k3, (sff, d), dtype=dtype),
+        }
+    return p
+
+
+def _capacity(num_tokens: int, cfg) -> int:
+    c = int(num_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)   # pad to a multiple of 8
+
+
+def moe_forward(params, cfg, x):
+    """x: (B, T, d) -> (B, T, d), aux_loss scalar.
+
+    When ``cfg.moe_groups`` > 1 the GShard-style grouped dispatch is
+    used: tokens are bucketed per group (= per data shard) and the
+    group<->expert exchange is expressed as a sharded-axes transpose
+    that lowers to all-to-all instead of a full-buffer all-reduce —
+    ~20x less dispatch traffic at scale (EXPERIMENTS.md §Perf,
+    llama4-scout hillclimb)."""
+    if getattr(cfg, "moe_impl", "") == "shard_map" and AMBIENT_MESH is not None:
+        return moe_forward_shard_map(params, cfg, x, AMBIENT_MESH)
+    if getattr(cfg, "moe_groups", 0) > 1:
+        return moe_forward_grouped(params, cfg, x)
+    return _moe_forward_flat(params, cfg, x)
+
+
+def moe_forward_grouped(params, cfg, x):
+    """Grouped (expert-parallel) dispatch, written with an explicit
+    group axis (no vmap) so EVERY stage carries a sharding constraint:
+
+      tokens   (G, Tg, d)      P(data, None, None)   — local routing/sort
+      buffer   (G, E, Cg, d)   P(data, model, ...)   — scatter output
+      compute  (G, E, Cg, d)   P(None, model, ...)   — the G<->E reshard
+                                                       IS the all-to-all
+      combine  (G, Tg, d)      P(data, None, None)   — group-local gather
+
+    All index math (sort, positions, slots) is per-group (axis=1), so a
+    group's tokens never reference another group's buffer rows and SPMD
+    can keep the scatter/gather local to the data shard."""
+    from jax.sharding import PartitionSpec as P
+
+    wsc = jax.lax.with_sharding_constraint
+    B, T, d = x.shape
+    E, K, G = cfg.num_experts, cfg.top_k, cfg.moe_groups
+    Tflat = B * T
+    assert Tflat % G == 0, (Tflat, G)
+    Tg = Tflat // G
+    xg = wsc(x.reshape(G, Tg, d), P("data", None, None))
+
+    # ---- routing (local per group) ---------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Tg, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E), axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- per-group sort-based dispatch ------------------------------
+    C = _capacity(Tg, cfg)
+    fe = expert_ids.reshape(G, Tg * K)                       # (G, S)
+    fg = gate_vals.reshape(G, Tg * K)
+    ft = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K))
+
+    order = jnp.argsort(fe, axis=1, stable=True)
+    se = jnp.take_along_axis(fe, order, axis=1)
+    stk = jnp.take_along_axis(ft, order, axis=1)
+    sg = jnp.take_along_axis(fg, order, axis=1)
+
+    counts = jnp.sum(jax.nn.one_hot(fe, E, dtype=jnp.int32), axis=1)  # (G, E)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    pos = jnp.arange(Tg * K)[None] - jnp.take_along_axis(starts, se, axis=1)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)              # (G, S)
+
+    rows = se.shape[1]
+    xs = jnp.take_along_axis(
+        xg, stk[..., None], axis=1)                          # (G, S, d)
+    buf = jnp.zeros((G, E * C + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(G)[:, None], slot].set(
+        jnp.where(keep[..., None], xs, 0), mode="drop")
+    eb = buf[:, : E * C].reshape(G, E, C, d)
+    eb = wsc(eb, P("data", "model", None, None))
+
+    # ---- expert compute on the (G->data, E->model) layout: tokens stay
+    # in their data row; the within-row E redistribution is the
+    # all-to-all.  (Replicating G over data instead = a full gather —
+    # measured 2.6x WORSE; see §Perf iteration B2.)
+    g_ = jnp.einsum("gecd,edf->gecf", eb, params["w_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", eb, params["w_up"])
+    oc = jnp.einsum("gecf,efd->gecd", silu(g_) * u_, params["w_down"])
+    oc = wsc(oc, P("data", "model", None, None))
+
+    out = oc.reshape(G, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((G, 1, d), out.dtype)], axis=1)
+    gathered = jnp.take_along_axis(out, slot[..., None], axis=1)
+    gathered = gathered * (sg * keep).astype(out.dtype)[..., None]
+    combined = jnp.zeros((G, Tg, d), x.dtype).at[
+        jnp.arange(G)[:, None], stk].add(gathered)
+    combined = wsc(combined, P("data", None, None))
+
+    y = combined
+    if cfg.num_shared_experts > 0:
+        sp = params["shared"]
+        sg_ = jnp.einsum("gtd,df->gtf", xg, sp["w_gate"])
+        su = jnp.einsum("gtd,df->gtf", xg, sp["w_up"])
+        y = y + jnp.einsum("gtf,fd->gtd", silu(sg_) * su, sp["w_down"])
+
+    return y.reshape(B, T, d), aux
+
+
+def moe_forward_shard_map(params, cfg, x, mesh):
+    """Expert-parallel MoE via shard_map (§Perf iteration B4).
+
+    Insight from iterations B1-B3 (EXPERIMENTS.md): pjit sharding
+    constraints cannot localize the dispatch/combine scatters — SPMD
+    replicates + all-reduces the full (E*C, d) buffer (~2.3 TB/device
+    for llama4-scout train).  Under shard_map the structure is explicit:
+
+      * activations arrive data-sharded on batch, REPLICATED over
+        "model" — so each model column already holds its row's tokens:
+        dispatch = free local selection (sort-compact to the column's
+        own experts), NO collective;
+      * each column computes its E/16 experts;
+      * combine = one psum over "model" of the (B_loc, T, d) partial
+        outputs — exactly the cost of a standard TP all-reduce.
+
+    Ideal collective bytes/layer = B_loc*T*d (one AR), vs the flat
+    path's full-buffer ARs.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.num_experts, cfg.top_k
+    mm = mesh.shape["model"]
+    assert E % mm == 0, (E, mm)
+    E_loc = E // mm
+
+    def local_fn(router, w_gate, w_up, w_down, shared, xl):
+        # xl: (B_loc, T, d); w_*: (E_loc, d, ff); runs per device
+        Bl, T, d = xl.shape
+        Tl = Bl * T
+        xf = xl.reshape(Tl, d)
+        m_idx = jax.lax.axis_index("model")
+        e_lo = m_idx * E_loc
+
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E), axis=0)
+        aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+        # local selection: slots only for THIS column's experts
+        C = _capacity(Tl, cfg)
+        fe = expert_ids.reshape(-1)
+        fg = gate_vals.reshape(-1)
+        ft = jnp.repeat(jnp.arange(Tl), K)
+        le = fe - e_lo                                   # local expert id
+        mine = (le >= 0) & (le < E_loc)
+        le = jnp.where(mine, le, E_loc)                  # dump bucket
+        order = jnp.argsort(le, stable=True)
+        sle, stk, sg = le[order], ft[order], fg[order]
+        counts = jnp.sum(jax.nn.one_hot(le, E_loc + 1, dtype=jnp.int32), axis=0)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(Tl * K) - starts[sle]
+        keep = (pos < C) & (sle < E_loc)
+        slot = jnp.where(keep, sle * C + pos, E_loc * C)
+
+        buf = jnp.zeros((E_loc * C + 1, d), xl.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], xf[stk], 0),
+                               mode="drop")
+        eb = buf[: E_loc * C].reshape(E_loc, C, d)
+
+        g_ = jnp.einsum("ecd,edf->ecf", eb, w_gate)
+        u_ = jnp.einsum("ecd,edf->ecf", eb, w_up)
+        oc = jnp.einsum("ecf,efd->ecd", silu(g_) * u_, w_down)
+        out = jnp.concatenate([oc.reshape(E_loc * C, d),
+                               jnp.zeros((1, d), oc.dtype)], axis=0)
+        gathered = out[slot] * (sg * keep).astype(out.dtype)[:, None]
+        partial = jnp.zeros((Tl, d), xl.dtype).at[stk].add(gathered)
+
+        if shared is not None:
+            # shared expert TP-sharded over "model" (ff slice per
+            # column); its partial sum folds into the SAME psum as the
+            # routed experts — still exactly one collective (B5: the
+            # replicated version cost 5x compute; see §Perf)
+            sgate = jnp.einsum("td,df->tf", xf, shared["w_gate"])
+            sup = jnp.einsum("td,df->tf", xf, shared["w_up"])
+            partial = partial + jnp.einsum("tf,fd->td", silu(sgate) * sup,
+                                           shared["w_down"]).reshape(Tl, d)
+
+        # the ONE collective: sum expert (+ shared-slice) contributions
+        y = jax.lax.psum(partial, "model")
+        aux = jax.lax.pmean(aux, "data")        # consistent scalar out
+        return y.reshape(Bl, T, d), aux
+
+    shared = params.get("shared")
+    try:
+        from jax import shard_map as _sm
+    except ImportError:                      # older jax
+        from jax.experimental.shard_map import shard_map as _sm
+    fn = _sm(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None),
+                  (None if shared is None else
+                   {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                    "w_down": P("model", None)}),
+                  P("data", None, None)),
+        out_specs=(P("data", None, None), P()),
+        check_vma=False,
+    )
+    return fn(params["router"], params["w_gate"], params["w_up"],
+              params["w_down"], shared, x)
+
+
+# ambient mesh for the shard_map MoE path (set by launch/dryrun.py /
+# trainers before tracing; pjit-only paths never touch it)
+AMBIENT_MESH = None
+
+
+def _moe_forward_flat(params, cfg, x):
+    B, T, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    Tflat = B * T
+    xf = x.reshape(Tflat, d)
+
+    # ---- routing ---------------------------------------------------
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize
+
+    # switch-style load-balance loss
+    me = jnp.mean(probs, axis=0)                             # mean router prob
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], E)
+    ce = jnp.mean(one_hot_top1, axis=0)                      # fraction routed
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ---------------------------------------
+    C = _capacity(Tflat, cfg)
+    flat_expert = expert_ids.reshape(-1)                     # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(Tflat), K)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    s_expert = flat_expert[order]
+    s_token = flat_token[order]
+    s_gate = flat_gate[order]
+
+    # position of each routed slot within its expert bucket
+    counts = jnp.bincount(flat_expert, length=E)             # (E,)
+    starts = jnp.cumsum(counts) - counts                     # (E,)
+    pos_in_expert = jnp.arange(Tflat * K) - starts[s_expert]
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, s_expert * C + pos_in_expert, E * C)  # overflow -> dump row
+
+    # scatter tokens into the expert buffer (+1 dump row for overflow)
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[s_token], mode="drop")
+    eb = buf[: E * C].reshape(E, C, d)
+    if getattr(cfg, "moe_groups", 0) > 1:
+        # expert-compute stage: experts over "model"; the transition from
+        # the (G over "data") scatter above IS the all-to-all
+        from jax.sharding import PartitionSpec as P
+        eb = jax.lax.with_sharding_constraint(eb, P("model", None, None))
+
+    # ---- expert computation (batched SwiGLU) -----------------------
+    g = jnp.einsum("ecd,edf->ecf", eb, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", eb, params["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", silu(g) * u, params["w_down"])
+    out = out.reshape(E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+
+    # ---- combine ----------------------------------------------------
+    gathered = out[slot] * (s_gate * keep).astype(out.dtype)[:, None]
+    combined = jnp.zeros((Tflat, d), x.dtype).at[s_token].add(gathered)
+
+    y = combined
+    if cfg.num_shared_experts > 0:
+        sp = params["shared"]
+        sg = jnp.einsum("td,df->tf", xf, sp["w_gate"])
+        su = jnp.einsum("td,df->tf", xf, sp["w_up"])
+        y = y + jnp.einsum("tf,fd->td", silu(sg) * su, sp["w_down"])
+
+    return y.reshape(B, T, d), aux

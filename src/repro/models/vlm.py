@@ -1,0 +1,79 @@
+"""VLM backbone (InternVL2-1B-style, arXiv:2404.16821).
+
+Per the assignment carve-out, the vision frontend (InternViT + MLP
+projector) is a STUB: ``input_specs`` supplies precomputed patch
+embeddings of shape (B, num_patches, d_model).  This module implements
+the language decoder that consumes them: patch embeddings are scattered
+over the first ``num_patches`` token positions (the <img> placeholder
+region), then the standard dense decoder runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+def init_params(key, cfg, dtype=jnp.float32):
+    p = transformer.init_params(key, cfg, dtype)
+    # learned projector bias applied to incoming patch embeddings
+    p["patch_ln"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _merge(params, cfg, tokens, patch_embeds):
+    """Produce the additive embedding stream: patches occupy positions
+    [0, num_patches); text embeddings elsewhere (token embedding of the
+    placeholder id is zeroed by the mask trick below)."""
+    B, T = tokens.shape
+    npatch = patch_embeds.shape[1]
+    if npatch > T:          # prompt shorter than the image region
+        patch_embeds = patch_embeds[:, :T]
+        npatch = T
+    from repro.models.layers import rms_norm
+    pe = rms_norm(patch_embeds, params["patch_ln"], cfg.norm_eps)
+    pad = jnp.zeros((B, T - npatch, cfg.d_model), pe.dtype)
+    extra = jnp.concatenate([pe, pad], axis=1)
+    # zero out the token embedding under the image region
+    mask = (jnp.arange(T) >= npatch).astype(extra.dtype)[None, :, None]
+    return extra, mask
+
+
+def forward_hidden(params, cfg, tokens, patch_embeds, use_flash=False,
+                   remat=False):
+    from repro.models.layers import rms_norm
+    B, T = tokens.shape
+    extra, mask = _merge(params, cfg, tokens, patch_embeds)
+    x = params["embed"][tokens] * mask + extra
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    h, aux = transformer.stack_forward(params, cfg, x, positions,
+                                       use_flash=use_flash, remat=remat)
+    return rms_norm(h, params["ln_f"], cfg.norm_eps), aux
+
+
+def forward(params, cfg, tokens, patch_embeds, use_flash=False, remat=False):
+    h, aux = forward_hidden(params, cfg, tokens, patch_embeds,
+                            use_flash=use_flash, remat=remat)
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", h, params["embed"]), aux
+    return jnp.einsum("btd,dv->btv", h, params["head"]), aux
+
+
+def init_cache(params, cfg, batch, max_len, dtype=jnp.float32):
+    return transformer.init_cache(params, cfg, batch, max_len, dtype)
+
+
+def prefill(params, cfg, tokens, patch_embeds, cache, use_flash=False):
+    extra, mask = _merge(params, cfg, tokens, patch_embeds)
+    # reuse transformer.prefill with pre-merged embeddings: emulate by
+    # passing extra_embeds and masking inside — transformer.prefill adds
+    # extra_embeds to embed[tokens], so bake the mask into extra.
+    emb = params["embed"][tokens]
+    extra = extra - emb * (1.0 - mask)   # net effect: emb*mask + patches
+    return transformer.prefill(params, cfg, tokens, cache,
+                               use_flash=use_flash, extra_embeds=extra)
+
+
+def decode_step(params, cfg, token, cache):
+    return transformer.decode_step(params, cfg, token, cache)

@@ -1,0 +1,207 @@
+"""Partition rules: FSDP (over "data") x tensor-parallel (over "model"),
+with Parle replicas riding the dedicated replica axis ("pod" on the
+multi-pod mesh, "replica" on the single-pod Parle mesh).
+
+``spec_for_path`` maps a pytree leaf (by its key path + shape) to a
+PartitionSpec; ``param_specs``/``state_specs`` apply it over whole trees.
+Stacked layer weights (under "blocks"/"layers") get a leading None for
+the scan axis; Parle/optimizer states get the replica axis prepended.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA, MODEL = "data", "model"
+
+_REPLICATED_SUFFIXES = (
+    "ln", "ln1", "ln2", "ln_f", "norm", "patch_ln",
+    "bq", "bk", "bv", "b", "b1", "b2", "b3", "conv_b",
+    "A_log", "D", "dt_bias",
+)
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(getattr(p, "idx", p)))
+    return out
+
+
+def spec_for_path(names, shape) -> P:
+    """Core rule table (without stack/replica prefixes)."""
+    leaf = names[-1] if names else ""
+    ndim = len(shape)
+
+    if leaf in _REPLICATED_SUFFIXES or ndim <= 1:
+        return P(*([None] * ndim))
+
+    if leaf == "embed":
+        if ndim == 3:                       # audio: (K, V, d)
+            return P(None, DATA, MODEL)
+        return P(DATA, MODEL)               # (V, d)
+    if leaf == "head":
+        return P(DATA, MODEL)               # (d, V): vocab-parallel out
+    if leaf == "router":
+        return P(DATA, None)
+    if ndim == 3:                           # MoE expert stacks (E, ., .)
+        if leaf == "w_down":
+            return P(MODEL, None, DATA)     # (E, ff, d)
+        return P(MODEL, DATA, None)         # (E, d, ff)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+        return P(DATA, MODEL)
+    if leaf in ("wo", "w_down", "out_proj"):
+        return P(MODEL, DATA)
+    if leaf == "conv_w":
+        return P(None, MODEL)
+    if ndim == 2:
+        return P(DATA, MODEL)
+    return P(*([None] * ndim))
+
+
+def _maybe_stacked(names, shape):
+    """Strip the scan (layer-stack) axis for leaves under blocks/layers."""
+    if any(n in ("blocks", "layers") for n in names):
+        inner = spec_for_path(names, shape[1:])
+        return P(None, *inner)
+    return spec_for_path(names, shape)
+
+
+def param_pspecs(params, policy: str = "fsdp_tp") -> Any:
+    """PartitionSpec tree for a (un-replicated) parameter tree.
+
+    policy:
+      fsdp_tp  — weights sharded over BOTH axes (ZeRO-3 x tensor
+                 parallel). Minimum memory; pays a per-step all-gather
+                 of every weight over the "data" axis.
+      tp_only  — weights sharded over "model" only, replicated over
+                 "data".  16x the weight memory of fsdp_tp but ZERO
+                 weight-gather traffic — the right choice for decode
+                 and for models whose params/16 fit HBM (see
+                 EXPERIMENTS.md §Perf).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_maybe_stacked(_path_names(p), l.shape) for p, l in flat]
+    if policy == "tp_only":
+        specs = [P(*[None if ax == DATA else ax for ax in sp]) for sp in specs]
+    elif policy == "dp_only":
+        # no tensor parallelism: the "model" axis is repurposed as extra
+        # data parallelism; weights ZeRO-shard over the combined axes
+        # where divisible (sanitize_pspecs drops the rest).  The right
+        # choice when d_model is too small for 16-way TP (see
+        # EXPERIMENTS.md §Perf, internvl2-1b).
+        def conv(sp):
+            out, used = [], False
+            for ax in sp:
+                if ax == DATA and not used:
+                    out.append((DATA, MODEL))
+                    used = True
+                elif ax == MODEL or ax == DATA:
+                    out.append(None)
+                else:
+                    out.append(ax)
+            return P(*out)
+        specs = [conv(sp) for sp in specs]
+    elif policy != "fsdp_tp":
+        raise ValueError(policy)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def prepend_axis(pspec_tree, axis_name: Optional[str]):
+    """Prepend a leading axis (Parle replica dim) to every spec."""
+    return jax.tree.map(lambda s: P(axis_name, *s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_pspecs(pspec_tree, sds_tree, mesh: Mesh):
+    """Drop mesh axes that do not evenly divide the corresponding array
+    dimension — pjit ARGUMENT shardings must divide exactly (vocab sizes
+    like 151655 or expert counts like 60 don't divide a 16-wide axis)."""
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        out = []
+        for dim_size, axis in zip(leaf.shape, dims):
+            if axis is None:
+                out.append(None)
+                continue
+            names = axis if isinstance(axis, tuple) else (axis,)
+            total = 1
+            for nm in names:
+                total *= mesh.shape.get(nm, 1)
+            out.append(axis if (dim_size % total == 0 and dim_size >= total)
+                       else None)
+        return P(*out)
+
+    return jax.tree.map(fix, pspec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------
+# Batch / cache specs
+# ------------------------------------------------------------------
+
+def batch_pspecs(batch_shapes, mesh: Mesh, replica_axis: Optional[str] = None):
+    """Shard the per-replica batch axis over "data" when divisible;
+    batch leaves have layout (n?, B, ...)."""
+    data_size = int(np.prod([mesh.shape[a] for a in (DATA,)])) \
+        if DATA in mesh.shape else 1
+
+    def spec(leaf):
+        shape = leaf.shape
+        off = 0
+        lead = []
+        if replica_axis is not None:
+            lead = [replica_axis]
+            off = 1
+        b = shape[off] if len(shape) > off else 1
+        bspec = DATA if (b % data_size == 0 and b >= data_size) else None
+        rest = [None] * (len(shape) - off - 1)
+        return P(*lead, bspec, *rest)
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_pspecs(cache, mesh: Mesh) -> Any:
+    """KV / SSM caches: batch over "data", head-ish axis over "model".
+
+    Layouts handled (leading L or sites axis is None):
+      kv k/v      (L, B, S, KV, hd)   -> (None, data, None, model, None)
+      ssm conv    (L, B, W-1, C)      -> (None, data, None, model)
+      ssm state   (L, B, nh, N, P)    -> (None, data, model, None, None)
+      pos scalar  ()                  -> ()
+    """
+    data_size = mesh.shape.get(DATA, 1)
+
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if nd == 5:      # (L, B, S, KV, hd) or (L, B, nh, N, P)
+            b = shape[1]
+            bspec = DATA if b % data_size == 0 and b >= data_size else None
+            return P(None, bspec, None, MODEL, None) if shape[3] != shape[4] \
+                else P(None, bspec, MODEL, None, None)
+        if nd == 4:      # (L, B, W-1, C)
+            b = shape[1]
+            bspec = DATA if b % data_size == 0 and b >= data_size else None
+            return P(None, bspec, None, MODEL)
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec, cache)

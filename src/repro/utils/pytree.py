@@ -1,0 +1,66 @@
+"""Small pytree algebra used by the optimizers (Parle state math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """s * a + b, leafwise."""
+    return jax.tree.map(lambda x, y: s * x + y, a, b)
+
+
+def tree_lerp(a, b, t):
+    """(1 - t) * a + t * b."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_count(a):
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_mean_axis0(a):
+    """Mean over a leading replica axis on every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_broadcast_axis0(a, n):
+    """Tile every leaf along a new leading replica axis of size n."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)

@@ -1,0 +1,21 @@
+"""Scan-unroll control for honest dry-run accounting.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so FLOPs/bytes/collectives inside lax.scan would be undercounted
+by ~num_layers in the roofline.  The dry-run therefore lowers with
+REPRO_SCAN_UNROLL=full, fully unrolling the layer-stack (and other
+compute-bearing) scans; training/tests keep the rolled form (small HLO,
+fast compiles).  Inner scans with tiny bodies (SSD inter-chunk state
+hop) stay rolled — their contribution is negligible and noted in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import os
+
+
+def layer_unroll():
+    v = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    if v in ("full", "0", "true", "True"):
+        return True
+    return max(1, int(v))

@@ -1,0 +1,98 @@
+"""Per-assigned-architecture smoke tests (deliverable f): a REDUCED
+variant of the same family (2 layers, d_model <= 512, <= 4 experts) runs
+one forward and one Parle train step on CPU; output shapes + no NaNs.
+The FULL configs are exercised only via launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ParleConfig, get_config, smoke_variant
+from repro.core import parle
+from repro.models.model import build_model
+
+BATCH, SEQ = 2, 32
+
+
+def _smoke_batch(cfg, key, n_replicas=0):
+    kt, kp, kc = jax.random.split(key, 3)
+    lead = (n_replicas,) if n_replicas else ()
+    if cfg.family == "audio":
+        toks = jax.random.randint(kt, lead + (BATCH, cfg.num_codebooks, SEQ),
+                                  0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks,
+                "cond": jax.random.normal(kc, lead + (BATCH, cfg.cond_len,
+                                                      cfg.d_model))}
+    toks = jax.random.randint(kt, lead + (BATCH, SEQ), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jax.random.normal(
+            kp, lead + (BATCH, cfg.num_patches, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_reduced_variant_constraints(arch):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.family == "moe":
+        assert cfg.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward(arch, key):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, key)
+    logits, _ = model.apply(params, batch)
+    if cfg.family == "audio":
+        assert logits.shape == (BATCH, SEQ, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_parle_train_step(arch, key):
+    """One Parle (n=2) training step on the reduced variant: finite loss,
+    finite state, step counter advances."""
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(key)
+    pcfg = ParleConfig(n_replicas=2, L=2, lr=0.05, lr_inner=0.05)
+    state = parle.init(params, pcfg)
+    step = jax.jit(parle.make_train_step(model.loss, pcfg))
+    batch = _smoke_batch(cfg, key, n_replicas=2)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    for leaf in jax.tree.leaves(state.x):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_decode_step(arch, key):
+    """Prefill 8 tokens then decode 1 on the reduced variant."""
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, key)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][..., :8]
+    cache = model.init_cache(params, BATCH, SEQ)
+    lp, cache = model.prefill(params, pre, cache)
+    step = dict(pre)
+    step["tokens"] = batch["tokens"][..., 8:9]
+    ld, cache = model.decode(params, step, cache)
+    assert np.isfinite(np.asarray(ld, np.float32)).all(), arch
+
+
+def test_registry_is_complete():
+    assert len(ARCHS) == 10
+    families = {c.family for c in ARCHS.values()}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+    for c in ARCHS.values():
+        assert c.source, f"{c.name} missing citation"

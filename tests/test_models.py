@@ -1,0 +1,97 @@
+"""Forward/loss/grad sanity for every model family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CONFIGS, make_batch
+from repro.models.model import build_model
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_forward_shapes_and_finiteness(family, key):
+    cfg = FAMILY_CONFIGS[family]
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    logits, aux = model.apply(params, batch)
+    if family == "audio":
+        assert logits.shape == (2, 32, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_loss_and_grads_finite(family, key):
+    cfg = FAMILY_CONFIGS[family]
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    # loss near ln(V) at init
+    assert float(metrics["ce"]) < np.log(cfg.vocab_size) * 1.5
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_loss_decreases_under_sgd(family, key):
+    cfg = FAMILY_CONFIGS[family]
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    from repro.optim import sgd
+    st = sgd.init(params)
+    step = jax.jit(sgd.make_train_step(model.loss, 0.1))
+    l0 = None
+    for _ in range(10):
+        st, m = step(st, batch)
+        if l0 is None:
+            l0 = float(m["loss"])
+    assert float(m["loss"]) < l0, (family, l0, float(m["loss"]))
+
+
+def test_moe_routing_load_balance(key):
+    """Aux loss is >= 1 * weight at perfect balance and grows with skew."""
+    cfg = FAMILY_CONFIGS["moe"]
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    _, metrics = model.loss(params, batch)
+    assert float(metrics["aux"]) >= 0.0
+
+
+def test_sliding_window_masks_out_far_context(key):
+    """With window w, logits at position t do not depend on tokens < t - w."""
+    import dataclasses
+    cfg = dataclasses.replace(FAMILY_CONFIGS["dense"], sliding_window=4)
+    model = build_model(cfg)
+    params = model.init(key)
+    t1 = jax.random.randint(key, (1, 16), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % cfg.vocab_size)  # perturb far past
+    l1, _ = model.apply(params, {"tokens": t1, "labels": t1})
+    l2, _ = model.apply(params, {"tokens": t2, "labels": t2})
+    # last position attends to [12..15]; token 0 cannot influence it
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_grouped_dispatch_matches_flat(key):
+    """GShard-style grouped dispatch (moe_groups>1) must be numerically
+    identical to the flat path at drop-free capacity (§Perf lever)."""
+    import dataclasses
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(FAMILY_CONFIGS["moe"], num_shared_experts=0)
+    params = moe_mod.init_moe_params(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    flat, _ = moe_mod.moe_forward(params, cfg, x)
+    gcfg = dataclasses.replace(cfg, moe_groups=4)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with jax.set_mesh(mesh):
+        grouped, _ = jax.jit(
+            lambda p, x: moe_mod.moe_forward(p, gcfg, x))(params, x)
+    np.testing.assert_allclose(np.asarray(grouped), np.asarray(flat),
+                               rtol=1e-5, atol=1e-6)
