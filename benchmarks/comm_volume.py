@@ -1,15 +1,29 @@
 """§4.1 communication accounting: exact bytes moved across the replica
 boundary per gradient evaluation, Parle vs Elastic-SGD vs data-parallel
 SGD, for each assigned architecture at full scale (analytic — no
-allocation), plus the measured collective bytes from the dry-run HLO
-when results/dryrun exists."""
+allocation), plus measured collective bytes from compiled HLO:
+
+  * the dry-run JSONs when results/dryrun exists, and
+  * ``--mesh replica:n`` — compile the shard_map Parle step on a real
+    (host) device mesh and parse the one sync all-reduce out of the
+    optimized HLO, e.g.
+
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/comm_volume.py --mesh replica:8
+
+    which verifies end-to-end that the ONLY collective in the compiled
+    program is the Eq. (8d) replica mean — model-size bytes, once every
+    L steps (the paper's O(2nN/L) amortized-communication claim).
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
-import jax
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import ARCHS, get_config
 
@@ -28,7 +42,63 @@ def analytic_rows():
     return rows
 
 
-def main():
+def measured_mesh_rows(mesh_spec: str, param_size: int):
+    """Compile the sharded Parle train step on ``mesh_spec`` and account
+    the collectives of its optimized HLO (per device)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ParleConfig
+    from repro.core import parle
+    from repro.launch.hlo_stats import collective_bytes
+    from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+
+    mesh = make_mesh_from_spec(mesh_spec)
+    raxis = replica_axis_of(mesh)
+    if raxis is None:
+        raise SystemExit(f"--mesh {mesh_spec!r} has no replica axis")
+    n = mesh.shape[raxis]
+    cfg = ParleConfig(n_replicas=n, L=L, batches_per_epoch=10)
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+
+    params = {"w": jnp.zeros((param_size,), jnp.float32)}
+    state = parle.init(params, cfg)
+    batch = {"t": jnp.zeros((n, 1), jnp.float32)}
+    step = parle.make_sharded_train_step(loss, cfg, mesh, replica_axis=raxis)
+    coll = collective_bytes(step.lower(state, batch).compile().as_text())
+
+    # the sync all-reduce moves the LOCAL replica-mean: param_size f32
+    expected = param_size * 4
+    ar = coll["bytes"]["all-reduce"]
+    # the output contract is 3-field CSV: keep commas out of the name
+    tag = mesh_spec.replace(":", "").replace(",", "_")
+    return [
+        f"comm_mesh_{tag},0,"
+        f"devices={n};params={param_size};"
+        f"all_reduce_bytes_per_device={ar};"
+        f"expected_sync_bytes={expected};"
+        f"collective_counts={sum(coll['counts'].values())};"
+        f"amortized_bytes_per_step={ar / L:.1f}"
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 'replica:8' — compile the shard_map Parle "
+                         "step on a host mesh and measure its collectives")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force XLA host device count (set before jax init)")
+    ap.add_argument("--param-size", type=int, default=1 << 20,
+                    help="model size (f32 elements) for --mesh measurement")
+    args = ap.parse_args(argv)
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
+
     out = []
     for name, nb, dp, el, pa in analytic_rows():
         out.append(f"comm_{name},0,params_gb={nb/1e9:.2f};"
@@ -44,6 +114,9 @@ def main():
                 out.append(f"comm_measured_{rec['arch']}_{rec['shape']},0,"
                            f"sync_collective_bytes_per_device={cb:.3e};"
                            f"amortized_per_step={cb/L:.3e}")
+    # measured: compiled shard_map step on a live (host) mesh
+    if args.mesh:
+        out.extend(measured_mesh_rows(args.mesh, args.param_size))
     for line in out:
         print(line)
     return out

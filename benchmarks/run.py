@@ -15,7 +15,9 @@ SUITES = {
     "table1": table1_baselines.main,     # Parle vs baselines (Table 1)
     "table2": table2_split_data.main,    # data splitting (Table 2, §5)
     "fig1": fig1_overlap.main,           # overlap / one-shot avg (§1.2)
-    "comm": comm_volume.main,            # §4.1 communication accounting
+    # comm_volume grew a CLI (--mesh); pass an empty argv so the suite
+    # runner's own argv (the suite names) doesn't leak into its parser
+    "comm": lambda: comm_volume.main([]),  # §4.1 communication accounting
     "kernels": kernel_bench.main,        # Pallas kernel oracle micro-bench
     "roofline": roofline.main,           # §Roofline aggregation
 }

@@ -114,34 +114,47 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> Parle
 # Sync step (8c)-(8d): the one cross-replica collective
 # ------------------------------------------------------------------
 
-def sync_step(state: ParleState, cfg, axis_name: str | None = None) -> ParleState:
+def sync_step(state: ParleState, cfg, axis_name: str | None = None,
+              use_kernel: bool = False) -> ParleState:
     mu, lr = cfg.momentum, cfg.lr
     inv_rho = 1.0 / state.scopes.rho
-    n = cfg.n_replicas
 
     # (8d) with eta'' = rho/n: the reference IS the replica mean.
-    # Leading-axis mean; under pjit with the replica axis sharded this is
-    # the single all-reduce.  (axis_name path kept for shard_map use.)
+    # Local path: leading-axis mean.  shard_map path (axis_name given):
+    # the global n replicas are laid out as (devices, n_per_device), so
+    # the global mean = pmean over the mesh axis of the LOCAL leading-
+    # axis mean — still exactly one all-reduce, of model-size bytes,
+    # regardless of how many replicas ride each device.
     if axis_name is None:
         xbar = tree_mean_axis0(state.x)
-        xbar = jax.tree.map(lambda m, x: jnp.broadcast_to(m[None], x.shape),
-                            xbar, state.x)
     else:
-        xbar = jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), state.x)
+        xbar = jax.tree.map(lambda v: jax.lax.pmean(jnp.mean(v, axis=0),
+                                                    axis_name), state.x)
 
     gamma_scale = 1.0 if cfg.scale_lr_by_gamma else 1.0 / state.scopes.gamma
 
-    def upd(x, z, v, xb):
-        g_x = gamma_scale * (x - z) + inv_rho * (x - xb)    # (8c)
-        v_new = mu * v + g_x
-        x_new = x - lr * (g_x + mu * v_new)
-        return x_new, v_new
+    if use_kernel:
+        # the kernel consumes the UN-broadcast mean: one model-size xbar
+        # buffer shared across replicas, never materialized at n x N
+        from repro.kernels import ops as kops
+        x, v_x = kops.parle_sync_update(
+            state.x, state.z, state.v_x, xbar,
+            gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu)
+    else:
+        xbar = jax.tree.map(lambda m, x: jnp.broadcast_to(m[None], x.shape),
+                            xbar, state.x)
 
-    out = jax.tree.map(upd, state.x, state.z, state.v_x, xbar)
-    treedef = jax.tree.structure(state.x)
-    leaves = treedef.flatten_up_to(out)
-    x = treedef.unflatten([l[0] for l in leaves])
-    v_x = treedef.unflatten([l[1] for l in leaves])
+        def upd(x, z, v, xb):
+            g_x = gamma_scale * (x - z) + inv_rho * (x - xb)    # (8c)
+            v_new = mu * v + g_x
+            x_new = x - lr * (g_x + mu * v_new)
+            return x_new, v_new
+
+        out = jax.tree.map(upd, state.x, state.z, state.v_x, xbar)
+        treedef = jax.tree.structure(state.x)
+        leaves = treedef.flatten_up_to(out)
+        x = treedef.unflatten([l[0] for l in leaves])
+        v_x = treedef.unflatten([l[1] for l in leaves])
 
     return ParleState(
         x=x, y=x, z=x,                    # reset y,z to x^a (paper: "we
@@ -152,12 +165,14 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None) -> ParleStat
     )
 
 
-def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> ParleState:
+def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
+               axis_name: str | None = None) -> ParleState:
     """One Parle step: inner update + conditional sync (k/L integer)."""
     state = inner_step(state, grads, cfg, use_kernel=use_kernel)
     do_sync = (state.step % cfg.L) == 0
     return jax.lax.cond(do_sync,
-                        lambda s: sync_step(s, cfg),
+                        lambda s: sync_step(s, cfg, axis_name=axis_name,
+                                            use_kernel=use_kernel),
                         lambda s: s,
                         state)
 
@@ -165,6 +180,39 @@ def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> Parle
 # ------------------------------------------------------------------
 # Train-step factory
 # ------------------------------------------------------------------
+
+def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
+                    use_kernel: bool, axis_name: str | None):
+    """Shared step body of the local and sharded train steps: per-replica
+    grads (vmap over the leading axis) -> fused_step -> metrics.  With
+    ``axis_name`` set, the leading axis holds only the LOCAL replicas and
+    the scalar loss metric is pmean'd to its global value."""
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def step(state: ParleState, batch):
+        losses, grads = jax.vmap(replica_grad)(state.y, batch)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, state.y)
+        new_state = fused_step(state, grads, cfg, use_kernel=use_kernel,
+                               axis_name=axis_name)
+        loss = jnp.mean(losses)
+        if axis_name is not None:
+            loss = jax.lax.pmean(loss, axis_name)
+        metrics = {
+            "loss": loss,
+            "loss_per_replica": losses,
+            "gamma": new_state.scopes.gamma,
+            "rho": new_state.scopes.rho,
+            "step": new_state.step,
+        }
+        return new_state, metrics
+
+    return step
+
 
 def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
                     use_kernel: bool = False):
@@ -176,27 +224,47 @@ def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
     replica sees its own mini-batch — data-parallel *inside* a replica is
     handled by the mesh ``data`` axis at the sharding layer).
     """
+    return _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                           axis_name=None)
 
-    def replica_grad(params, batch):
-        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        return loss, g
 
-    def step(state: ParleState, batch):
-        losses, grads = jax.vmap(replica_grad)(state.y, batch)
-        if weight_decay:
-            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
-                                 grads, state.y)
-        new_state = fused_step(state, grads, cfg, use_kernel=use_kernel)
-        metrics = {
-            "loss": jnp.mean(losses),
-            "loss_per_replica": losses,
-            "gamma": new_state.scopes.gamma,
-            "rho": new_state.scopes.rho,
-            "step": new_state.step,
-        }
-        return new_state, metrics
+def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
+                            replica_axis: str = "replica",
+                            weight_decay: float = 0.0,
+                            use_kernel: bool = False):
+    """Distributed variant of :func:`make_train_step`: the leading
+    replica axis of ``ParleState`` (and of the batch) is sharded over
+    the ``replica_axis`` of ``mesh`` via shard_map.
 
-    return step
+    Each device holds n/|replica_axis| replicas and runs the inner loop
+    with ZERO cross-device traffic; the sync step's replica mean lowers
+    to a single pmean all-reduce over ``replica_axis`` — the paper's
+    O(2nN/L) amortized-communication property, in mesh terms.
+
+    State and batch arrive as GLOBAL arrays (leading axis n); outputs
+    keep the same layout, so checkpointing / ``average_model`` work
+    unchanged.
+    """
+    from repro.sharding.partition import parle_state_pspecs
+    from repro.utils.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_dev = mesh.shape[replica_axis]
+    if cfg.n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={cfg.n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+
+    # per-device shard: n_local = n / n_dev replicas on the leading axis
+    local_step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                                 axis_name=replica_axis)
+    state_specs = parle_state_pspecs(replica_axis)
+    batch_specs = P(replica_axis)
+    metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
+                    "gamma": P(), "rho": P(), "step": P()}
+    return jax.jit(shard_map(local_step, mesh,
+                             in_specs=(state_specs, batch_specs),
+                             out_specs=(state_specs, metric_specs)))
 
 
 def average_model(state: ParleState):

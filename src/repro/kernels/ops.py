@@ -43,3 +43,9 @@ def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha):
     return _pu.parle_update_tree(y, z, v, g, x, inv_gamma=inv_gamma,
                                  lr=lr, mu=mu, alpha=alpha,
                                  interpret=_interpret())
+
+
+def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu):
+    return _pu.parle_sync_tree(x, z, v, xbar, gamma_scale=gamma_scale,
+                               inv_rho=inv_rho, lr=lr, mu=mu,
+                               interpret=_interpret())

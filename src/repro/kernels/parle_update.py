@@ -1,13 +1,17 @@
-"""Fused Parle inner update (Eq. 8a-8b) as a Pallas TPU kernel.
+"""Fused Parle updates (Eq. 8a-8b inner, Eq. 8c-8d sync) as Pallas TPU
+kernels.
 
-Why a kernel: the inner step touches five N-sized streams (y, z, v_y,
-grad, x^a) and writes three.  Left to XLA as separate HLO ops this is
-~7 HBM round-trips of N each; fused, it is exactly 5 reads + 3 writes —
-the optimizer step is purely memory-bound, so fusion is the whole game.
+Why kernels: both steps are purely memory-bound elementwise updates over
+model-sized streams.  The inner step touches five N-sized streams (y, z,
+v_y, grad, x^a) and writes three; left to XLA as separate HLO ops this
+is ~7 HBM round-trips of N each; fused it is exactly 5 reads + 3 writes.
+The sync step (fired once every L steps, right after the one all-reduce
+produces xbar) reads four streams (x, z, v_x, xbar) and writes two
+(x', v_x') instead of the ~6 round-trips XLA emits for Eq. 8c-8d.
 TPU mapping: flat 1-D streams, tiled into (8, 1024)-shaped VMEM blocks
 (8x128-lane aligned); scalars ride in SMEM via scalar prefetch.
 
-Oracle: kernels/ref.py::parle_inner_update.
+Oracles: kernels/ref.py::parle_inner_update / parle_sync_update.
 """
 from __future__ import annotations
 
@@ -67,29 +71,111 @@ def parle_update_flat(y, z, v, g, x, scalars, interpret: bool = True):
     return y2.reshape(m), z2.reshape(m), v2.reshape(m)
 
 
-def parle_update_tree(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
-                      interpret: bool = True):
-    """Apply the fused kernel leafwise over a pytree (padding each leaf
+def _pack_scalars(*vals):
+    return jnp.stack([jnp.asarray(s, jnp.float32) for s in vals])
+
+
+def _leafwise(flat_fn, trees, scalars, num_out, interpret):
+    """Apply a flat fused kernel leafwise over pytrees (padding each leaf
     up to the block size; padding lanes are discarded)."""
-    scalars = jnp.stack([jnp.asarray(inv_gamma, jnp.float32),
-                         jnp.asarray(lr, jnp.float32),
-                         jnp.asarray(mu, jnp.float32),
-                         jnp.asarray(alpha, jnp.float32)])
-    leaves_y, treedef = jax.tree_util.tree_flatten(y)
-    leaves_z = treedef.flatten_up_to(z)
-    leaves_v = treedef.flatten_up_to(v)
-    leaves_g = treedef.flatten_up_to(g)
-    leaves_x = treedef.flatten_up_to(x)
-    out_y, out_z, out_v = [], [], []
-    for ly, lz, lv, lg, lx in zip(leaves_y, leaves_z, leaves_v, leaves_g, leaves_x):
-        shape, size = ly.shape, ly.size
+    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
+    leaves = [leaves0] + [treedef.flatten_up_to(t) for t in trees[1:]]
+    outs = [[] for _ in range(num_out)]
+    for leaf_group in zip(*leaves):
+        ref = leaf_group[0]
+        shape, size = ref.shape, ref.size
         pad = (-size) % BLOCK_ELEMS
         fl = lambda a: jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
-        ny, nz, nv = parle_update_flat(fl(ly), fl(lz), fl(lv), fl(lg), fl(lx),
-                                       scalars, interpret=interpret)
-        cut = lambda a: a[:size].reshape(shape).astype(ly.dtype)
-        out_y.append(cut(ny))
-        out_z.append(cut(nz))
+        res = flat_fn(*[fl(l) for l in leaf_group], scalars,
+                      interpret=interpret)
+        cut = lambda a: a[:size].reshape(shape).astype(ref.dtype)
+        for acc, r in zip(outs, res):
+            acc.append(cut(r))
+    un = jax.tree_util.tree_unflatten
+    return tuple(un(treedef, o) for o in outs)
+
+
+def parle_update_tree(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
+                      interpret: bool = True):
+    """Fused inner update (8a-8b) leafwise over pytrees."""
+    scalars = _pack_scalars(inv_gamma, lr, mu, alpha)
+    return _leafwise(parle_update_flat, (y, z, v, g, x), scalars,
+                     num_out=3, interpret=interpret)
+
+
+# ------------------------------------------------------------------
+# Sync step (8c)-(8d): x, v_x update applied right after the all-reduce
+# ------------------------------------------------------------------
+
+def _sync_kernel(scal_ref, x_ref, z_ref, v_ref, xbar_ref, x_out, v_out):
+    gamma_scale = scal_ref[0]
+    inv_rho = scal_ref[1]
+    lr = scal_ref[2]
+    mu = scal_ref[3]
+    x = x_ref[0]                       # (8, 1024); replica dim blocked at 1
+    g_x = gamma_scale * (x - z_ref[0]) + inv_rho * (x - xbar_ref[...])
+    v_new = mu * v_ref[0] + g_x
+    x_out[0] = x - lr * (g_x + mu * v_new)
+    v_out[0] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True):
+    """x, z, v: (R, M) f32; xbar: (M,) f32 with M % BLOCK_ELEMS == 0;
+    scalars: (4,) f32 = [gamma_scale, inv_rho, lr, mu].
+
+    xbar is the (already all-reduced) replica mean: it stays at size M
+    and is re-read per replica grid step — never materialized at R*M,
+    so the sync's HBM budget is 3 R*M + M reads and 2 R*M writes.
+    """
+    r, m = x.shape
+    rows = m // BLOCK[1]
+    grid = (r, rows // BLOCK[0])
+    shaped = lambda a: a.reshape(r, rows, BLOCK[1])
+    spec = pl.BlockSpec((1,) + BLOCK, lambda a, i, _s: (a, i, 0))
+    bar_spec = pl.BlockSpec(BLOCK, lambda a, i, _s: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((r, rows, BLOCK[1]), x.dtype)] * 2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[spec] * 3 + [bar_spec],
+        out_specs=[spec] * 2,
+    )
+    x2, v2 = pl.pallas_call(
+        _sync_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, shaped(x), shaped(z), shaped(v),
+      xbar.reshape(rows, BLOCK[1]))
+    return x2.reshape(r, m), v2.reshape(r, m)
+
+
+def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
+                    interpret: bool = True):
+    """Fused sync update (8c-8d) leafwise over pytrees.
+
+    x, z, v leaves carry the leading replica axis (R, ...); xbar leaves
+    are the UN-broadcast replica mean of shape (...) — one copy shared
+    by all R replicas.
+    """
+    scalars = _pack_scalars(gamma_scale, inv_rho, lr, mu)
+    leaves_x, treedef = jax.tree_util.tree_flatten(x)
+    leaves_z = treedef.flatten_up_to(z)
+    leaves_v = treedef.flatten_up_to(v)
+    leaves_b = treedef.flatten_up_to(xbar)
+    out_x, out_v = [], []
+    for lx, lz, lv, lb in zip(leaves_x, leaves_z, leaves_v, leaves_b):
+        r = lx.shape[0]
+        size = lb.size
+        assert lx.size == r * size, (lx.shape, lb.shape)
+        pad = (-size) % BLOCK_ELEMS
+        fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
+                                  ((0, 0), (0, pad)))
+        nx, nv = parle_sync_flat(fl(lx, r), fl(lz, r), fl(lv, r),
+                                 fl(lb, 1)[0], scalars, interpret=interpret)
+        cut = lambda a: a[:, :size].reshape(lx.shape).astype(lx.dtype)
+        out_x.append(cut(nx))
         out_v.append(cut(nv))
     un = jax.tree_util.tree_unflatten
-    return un(treedef, out_y), un(treedef, out_z), un(treedef, out_v)
+    return un(treedef, out_x), un(treedef, out_v)

@@ -32,6 +32,25 @@ def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha):
 
 
 # ------------------------------------------------------------------
+# parle_sync_update: fused Eq. (8c)-(8d) elementwise update
+# ------------------------------------------------------------------
+
+def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu):
+    """One fused Parle sync step on flat arrays (xbar precomputed — the
+    cross-replica mean is the collective, not the kernel's job).
+
+    g_x = gamma_scale (x - z) + inv_rho (x - xbar)
+    v'  = mu v + g_x
+    x'  = x - lr (g_x + mu v')
+    Returns (x', v').
+    """
+    g_x = gamma_scale * (x - z) + inv_rho * (x - xbar)
+    v_new = mu * v + g_x
+    x_new = x - lr * (g_x + mu * v_new)
+    return x_new, v_new
+
+
+# ------------------------------------------------------------------
 # flash_attention: causal (optionally sliding-window) MHA
 # ------------------------------------------------------------------
 

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr,
             *, chunk, nstate, hdim):
@@ -97,7 +99,7 @@ def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int = 128, interpret: bool = True):
         out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, B_mat, C_mat)

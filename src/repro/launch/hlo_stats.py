@@ -1,0 +1,79 @@
+"""Optimized-HLO accounting helpers (no jax device-state side effects).
+
+Extracted from launch/dryrun.py so that benchmarks (comm_volume) and
+tests can parse collective bytes out of a compiled program WITHOUT
+importing dryrun — whose import forces the 512-device host platform.
+"""
+from __future__ import annotations
+
+import re
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type annotation (array or tuple)."""
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO.
+
+    Post-optimization HLO operands are bare ids (no inline shapes), so a
+    def-map id -> bytes is built first from every instruction's result
+    type annotation.  ``*-done`` halves of async pairs are skipped (the
+    ``*-start`` already carries the transfer).
+    """
+    defs: dict = {}
+    coll_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type = text up to the op name (first lowercase word after
+        # the type annotation); bytes of all dtype[dims] tokens in it
+        op_m = re.match(r"((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*)+",
+                        rhs)
+        type_str = op_m.group(0) if op_m else rhs.split("(", 1)[0]
+        defs[name] = _type_bytes(type_str)
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                coll_lines.append((op, rhs))
+                break
+
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for op, rhs in coll_lines:
+        call = re.search(rf"\b{op}(?:-start)?\((.*)$", rhs).group(1)
+        depth, j = 1, 0
+        while j < len(call) and depth:
+            if call[j] == "(":
+                depth += 1
+            elif call[j] == ")":
+                depth -= 1
+            j += 1
+        operand_str = call[: j - 1] if j else call
+        b = sum(defs.get(name, 0) for name in _OPERAND_RE.findall(operand_str))
+        out[op] += b
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}

@@ -46,3 +46,43 @@ def replica_axis_of(mesh: Mesh) -> str | None:
         if name in mesh.shape:
             return name
     return None
+
+
+def parse_mesh_spec(spec: str) -> dict[str, int]:
+    """Parse a ``--mesh`` flag: "replica:4" / "replica:2,data:4".
+
+    Axis order in the string is the mesh axis order (outermost first).
+    """
+    out: dict[str, int] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, size = part.partition(":")
+        if not size:
+            raise ValueError(f"mesh axis {part!r} needs a size: 'name:n'")
+        if int(size) < 1:
+            raise ValueError(f"mesh axis {part!r} needs a positive size")
+        out[name.strip()] = int(size)
+    if not out:
+        raise ValueError(f"empty mesh spec {spec!r}")
+    return out
+
+
+def make_mesh_from_spec(spec: str) -> Mesh:
+    """Build a mesh from a ``--mesh`` string.
+
+    "replica:n" is the Parle layout: one all-reduce over "replica" every
+    L steps is the ONLY collective.  Exactly prod(sizes) devices are
+    used (the first ones) — leftover devices are left idle rather than
+    silently absorbed into an axis nothing shards over.
+    """
+    axes = parse_mesh_spec(spec)
+    devices = jax.devices()
+    need = int(np.prod(list(axes.values())))
+    if need > len(devices):
+        raise ValueError(f"mesh {spec!r} needs {need} devices, have "
+                         f"{len(devices)} (hint: XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={need})")
+    return Mesh(np.asarray(devices[:need]).reshape(tuple(axes.values())),
+                tuple(axes))

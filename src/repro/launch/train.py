@@ -43,6 +43,13 @@ def build_argparser():
                     help="paper §5: each replica sees a disjoint shard")
     ap.add_argument("--use-kernel", action="store_true",
                     help="fused Pallas parle_update (interpret on CPU)")
+    ap.add_argument("--mesh", default="",
+                    help="shard replicas over a device mesh, e.g. "
+                         "'replica:4' (parle/entropy_sgd only); the sync "
+                         "mean lowers to one all-reduce every L steps")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "(CPU-only; must be set before jax initializes)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -52,6 +59,11 @@ def build_argparser():
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
+    if args.host_devices:
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
@@ -81,8 +93,21 @@ def main(argv=None):
                                batches_per_epoch=max(args.steps // 4, 1))
             n = 1
         state = parle.init(params, pcfg)
-        step_fn = jax.jit(parle.make_train_step(
-            model.loss, pcfg, use_kernel=args.use_kernel))
+        if args.mesh:
+            from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+            mesh = make_mesh_from_spec(args.mesh)
+            raxis = replica_axis_of(mesh)
+            if raxis is None:
+                raise SystemExit(f"--mesh {args.mesh!r} has no replica axis")
+            step_fn = parle.make_sharded_train_step(
+                model.loss, pcfg, mesh, replica_axis=raxis,
+                use_kernel=args.use_kernel)
+            print(json.dumps({"mesh": dict(mesh.shape),
+                              "replica_axis": raxis,
+                              "replicas_per_device": n // mesh.shape[raxis]}))
+        else:
+            step_fn = jax.jit(parle.make_train_step(
+                model.loss, pcfg, use_kernel=args.use_kernel))
         get_params = parle.average_model
 
     t0 = time.time()

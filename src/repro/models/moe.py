@@ -242,10 +242,7 @@ def moe_forward_shard_map(params, cfg, x, mesh):
         return y.reshape(Bl, T, d), aux
 
     shared = params.get("shared")
-    try:
-        from jax import shard_map as _sm
-    except ImportError:                      # older jax
-        from jax.experimental.shard_map import shard_map as _sm
+    from repro.utils.compat import shard_map as _sm
     fn = _sm(
         local_fn, mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
@@ -255,7 +252,6 @@ def moe_forward_shard_map(params, cfg, x, mesh):
                     "w_down": P("model", None)}),
                   P("data", None, None)),
         out_specs=(P("data", None, None), P()),
-        check_vma=False,
     )
     return fn(params["router"], params["w_gate"], params["w_up"],
               params["w_down"], shared, x)

@@ -121,6 +121,20 @@ def prepend_axis(pspec_tree, axis_name: Optional[str]):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def parle_state_pspecs(replica_axis: str):
+    """Prefix-spec tree for a ``ParleState``: the five (n, ...) iterate
+    trees shard their leading replica axis over ``replica_axis``; the
+    step counter and the scoping scalars are replicated.
+
+    Returned as a pytree *prefix* (one P per state field), the form
+    shard_map's in_specs/out_specs consume directly.
+    """
+    from repro.core.parle import ParleState
+    rep = P(replica_axis)
+    return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
+                      step=P(), scopes=P())
+
+
 def sanitize_pspecs(pspec_tree, sds_tree, mesh: Mesh):
     """Drop mesh axes that do not evenly divide the corresponding array
     dimension — pjit ARGUMENT shardings must divide exactly (vocab sizes

@@ -1,0 +1,64 @@
+"""Version-portability shims for the jax APIs that renamed underneath us.
+
+The container pins jax 0.4.37; newer releases renamed three things this
+repo touches.  Every call site goes through here so the skew lives in
+exactly one file:
+
+  * ``shard_map``          — moved ``jax.experimental.shard_map`` ->
+                             ``jax.shard_map``; kwarg ``check_rep`` ->
+                             ``check_vma``.
+  * ``tpu_compiler_params``— ``pltpu.TPUCompilerParams`` ->
+                             ``pltpu.CompilerParams``.
+  * ``use_mesh``           — ``with mesh:`` context ->
+                             ``jax.set_mesh`` / ``jax.sharding.use_mesh``.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:                                     # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax <= 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` with replication checking toggled portably.
+
+    ``check`` maps to ``check_vma`` (new) or ``check_rep`` (old) —
+    both default to True upstream, but every use in this repo wants the
+    check off (pmean inside a cond is not rep-invariant to the checker).
+    """
+    kw = {}
+    if "check_vma" in _SM_PARAMS:
+        kw["check_vma"] = check
+    elif "check_rep" in _SM_PARAMS:
+        kw["check_rep"] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` where it exists, otherwise
+    the classic ``with mesh:`` context manager (jax <= 0.5)."""
+    setter = getattr(jax, "set_mesh", None) or \
+        getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

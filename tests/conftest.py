@@ -8,6 +8,13 @@ import pytest
 from repro.configs.base import ModelConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running coverage, excluded from the tier-1 default "
+        "run (pytest.ini addopts); select with -m slow")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
@@ -40,6 +47,19 @@ FAMILY_CONFIGS = {
                          vocab_size=64, head_dim=32, num_codebooks=4,
                          cond_len=4),
 }
+
+
+# tier-1 family sweeps run "dense" only; the other five families ride
+# the slow lane (-m slow).  Family coverage stays in tier-1 through the
+# two TIER1_ARCHS end-to-end smokes (dense + ssm) — the per-family
+# sweeps here cost 5-25 s of XLA compile each on this CPU container.
+TIER1_FAMILIES = ("dense",)
+
+
+def family_params():
+    return [f if f in TIER1_FAMILIES else
+            pytest.param(f, marks=pytest.mark.slow)
+            for f in sorted(FAMILY_CONFIGS)]
 
 
 def make_batch(cfg, key, batch=2, seq=32):

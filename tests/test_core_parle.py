@@ -173,6 +173,7 @@ def test_scoping_schedule_closed_form_and_clipping():
 # §1.2 diagnostics
 # ------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_one_shot_average_of_far_replicas_is_bad_but_parle_average_is_good():
     """Miniature of the paper's §1.2 motivation experiment."""
     task = TeacherTask(num_train=1024, num_test=512, in_dim=32, hidden=48)
@@ -227,10 +228,7 @@ def test_sync_pmean_path_matches_local_mean():
 
     # pmean path: replica axis is a mesh axis under shard_map
     mesh = jax.make_mesh((1,), ("replica",))
-    try:
-        from jax import shard_map as sm
-    except ImportError:
-        from jax.experimental.shard_map import shard_map as sm
+    from repro.utils.compat import shard_map as sm
 
     def per_replica(x, z):
         st = parle.ParleState(
@@ -241,13 +239,67 @@ def test_sync_pmean_path_matches_local_mean():
         # n=2 replicas live along the leading axis INSIDE the shard
         # here (mesh axis of size 1) so pmean reduces over axis_name
         # trivially; the leading-axis mean must match
-        new = parle.sync_step(st, cfg2)
+        new = parle.sync_step(st, cfg2, axis_name="replica")
         return new.x["w"]
 
-    got = sm(per_replica, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
-             check_vma=False)(st_local.x["w"], st_local.z["w"])
+    got = sm(per_replica, mesh=mesh, in_specs=(P(), P()),
+             out_specs=P())(st_local.x["w"], st_local.z["w"])
     np.testing.assert_allclose(np.asarray(got), np.asarray(out_local.x["w"]),
                                rtol=1e-6)
+
+
+def test_average_model_equals_replica_mean_after_sync():
+    """The deployable model is exactly the replica mean — including
+    right after a sync, where y and z have been reset to x^a."""
+    cfg = ParleConfig(n_replicas=4, L=1, batches_per_epoch=10)
+    key = jax.random.PRNGKey(5)
+    st = parle.init_from_replicas({"w": jax.random.normal(key, (4, 6))}, cfg)
+    st = st._replace(z=jax.tree.map(lambda a: a * 0.2, st.z))
+    new = parle.sync_step(st, cfg)
+    avg = parle.average_model(new)
+    np.testing.assert_allclose(np.asarray(avg["w"]),
+                               np.asarray(new.x["w"]).mean(0),
+                               rtol=1e-6, atol=1e-7)
+    # and the reset invariant: y == z == x after the sync
+    np.testing.assert_allclose(np.asarray(new.y["w"]), np.asarray(new.x["w"]))
+    np.testing.assert_allclose(np.asarray(new.z["w"]), np.asarray(new.x["w"]))
+
+
+def test_entropy_sgd_mode_config_equals_parle_n1():
+    """mode="entropy_sgd" in ParleConfig (the launch-layer spelling) is
+    the same trajectory as Parle with n=1 (§2.1/§3)."""
+    params = {"w": jnp.array([1.0, -2.0, 0.5])}
+    cfg_e = ParleConfig(n_replicas=1, L=3, mode="entropy_sgd")
+    cfg_p = ParleConfig(n_replicas=1, L=3, mode="parle")
+    se = parle.init(params, cfg_e)
+    sp = parle.init(params, cfg_p)
+    step_e = parle.make_train_step(quad_loss, cfg_e)
+    step_p = parle.make_train_step(quad_loss, cfg_p)
+    batch = {"x": jnp.zeros((1, 1))}
+    for _ in range(7):
+        se, _ = step_e(se, batch)
+        sp, _ = step_p(sp, batch)
+    np.testing.assert_allclose(np.asarray(se.x["w"]), np.asarray(sp.x["w"]),
+                               rtol=1e-7)
+
+
+def test_fused_step_counter_and_decay_fire_only_at_L():
+    """Invariant pinned from both sides: between syncs the scopes are
+    frozen and x^a never moves; at k % L == 0 both change."""
+    cfg = ParleConfig(n_replicas=2, L=3, batches_per_epoch=10)
+    st = parle.init({"w": jnp.ones(4)}, cfg)
+    step = parle.make_train_step(quad_loss, cfg)
+    batch = {"x": jnp.zeros((2, 1))}
+    prev_gamma, prev_x = float(st.scopes.gamma), np.asarray(st.x["w"])
+    for i in range(1, 8):
+        st, _ = step(st, batch)
+        assert int(st.step) == i
+        synced = (i % cfg.L == 0)
+        gamma = float(st.scopes.gamma)
+        x = np.asarray(st.x["w"])
+        assert (gamma != prev_gamma) == synced, i
+        assert bool((x != prev_x).any()) == synced, i
+        prev_gamma, prev_x = gamma, x
 
 
 def test_elastic_ref_update_matches_eq7b():

@@ -1,0 +1,157 @@
+"""Distributed replica execution: the shard_map path must reproduce the
+single-host vmap path exactly.
+
+The 8-device checks run in a SUBPROCESS: XLA locks the host device count
+at first backend init, and this suite (per conftest) must see the single
+real CPU device — so the forced 8-device platform lives in a child
+interpreter (XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_mesh_from_spec, parse_mesh_spec
+
+
+# ------------------------------------------------------------------
+# Mesh-spec parsing (pure, in-process)
+# ------------------------------------------------------------------
+
+def test_parse_mesh_spec():
+    assert parse_mesh_spec("replica:4") == {"replica": 4}
+    assert parse_mesh_spec("replica:2,data:4") == {"replica": 2, "data": 4}
+    assert parse_mesh_spec(" replica : 8 ") == {"replica": 8}
+    with pytest.raises(ValueError):
+        parse_mesh_spec("replica")
+    with pytest.raises(ValueError):
+        parse_mesh_spec("")
+
+
+def test_make_mesh_from_spec_single_device():
+    mesh = make_mesh_from_spec("replica:1")
+    assert mesh.shape["replica"] == 1
+
+
+def test_make_mesh_from_spec_rejects_oversubscription():
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        make_mesh_from_spec(f"replica:{len(jax.devices()) * 3}")
+
+
+def test_parse_mesh_spec_rejects_zero_size():
+    with pytest.raises(ValueError, match="positive"):
+        parse_mesh_spec("replica:0")
+
+
+# ------------------------------------------------------------------
+# 8-device host-mesh equivalence (subprocess)
+# ------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.configs.base import ParleConfig
+    from repro.core import parle
+    from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+
+    cfg = ParleConfig(n_replicas=8, L=3, lr=0.1, lr_inner=0.1,
+                      batches_per_epoch=5)
+    key = jax.random.PRNGKey(0)
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+
+    reps = {"w": jax.random.normal(key, (8, 6))}
+    batch = {"t": jax.random.normal(jax.random.PRNGKey(1), (8, 1))}
+
+    # reference: single-host vmap path (leading-axis mean)
+    st_ref = parle.init_from_replicas(reps, cfg)
+    step_ref = jax.jit(parle.make_train_step(loss, cfg))
+    # sharded: one replica per device, then two replicas per device
+    mesh8 = make_mesh_from_spec("replica:8")
+    assert replica_axis_of(mesh8) == "replica"
+    st8 = parle.init_from_replicas(reps, cfg)
+    step8 = parle.make_sharded_train_step(loss, cfg, mesh8)
+    mesh4 = jax.make_mesh((4,), ("replica",))
+    st4 = parle.init_from_replicas(reps, cfg)
+    step4 = parle.make_sharded_train_step(loss, cfg, mesh4)
+
+    for i in range(7):           # crosses two L=3 sync boundaries
+        st_ref, m_ref = step_ref(st_ref, batch)
+        st8, m8 = step8(st8, batch)
+        st4, m4 = step4(st4, batch)
+
+    for st, m in ((st8, m8), (st4, m4)):
+        np.testing.assert_allclose(np.asarray(st.x["w"]),
+                                   np.asarray(st_ref.x["w"]),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(st.z["w"]),
+                                   np.asarray(st_ref.z["w"]),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(float(m["loss"]), float(m_ref["loss"]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(m["loss_per_replica"]),
+                                   np.asarray(m_ref["loss_per_replica"]),
+                                   rtol=1e-6)
+        assert int(st.step) == int(st_ref.step) == 7
+        assert float(st.scopes.gamma) == float(st_ref.scopes.gamma)
+
+    # the deployable average is identical too
+    np.testing.assert_allclose(np.asarray(parle.average_model(st8)["w"]),
+                               np.asarray(parle.average_model(st_ref)["w"]),
+                               rtol=1e-6, atol=1e-7)
+    print("DISTRIBUTED_OK")
+
+    # ---- compiled-HLO communication accounting on the same mesh ----
+    from repro.launch.hlo_stats import collective_bytes
+    size = 4096
+    ccfg = ParleConfig(n_replicas=8, L=25, batches_per_epoch=10)
+    cst = parle.init({"w": jnp.zeros((size,), jnp.float32)}, ccfg)
+    cbatch = {"t": jnp.zeros((8, 1), jnp.float32)}
+    cstep = parle.make_sharded_train_step(loss, ccfg, mesh8)
+    coll = collective_bytes(cstep.lower(cst, cbatch).compile().as_text())
+    ar = coll["bytes"]["all-reduce"]
+    # one model-size (f32) all-reduce for xbar + one scalar for the loss
+    assert size * 4 <= ar <= size * 4 + 64, coll
+    others = {k: v for k, v in coll["bytes"].items()
+              if k != "all-reduce" and v}
+    assert not others, coll
+    print("COMM_OK", ar)
+""")
+
+
+def _run_child(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+
+
+@pytest.fixture(scope="module")
+def child_run():
+    """One 8-device child interpreter shared by the tests below (jax
+    import + compile dominate, so both checks ride a single process)."""
+    return _run_child(_CHILD)
+
+
+def test_sharded_step_matches_vmap_on_8_device_mesh(child_run):
+    assert child_run.returncode == 0, \
+        f"stdout:\n{child_run.stdout}\nstderr:\n{child_run.stderr}"
+    assert "DISTRIBUTED_OK" in child_run.stdout
+
+
+def test_compiled_sync_is_single_model_size_all_reduce(child_run):
+    """The paper's communication claim in compiled-HLO terms: the whole
+    train step contains ONE model-size all-reduce (plus the scalar loss
+    pmean) and no other collective kind."""
+    assert child_run.returncode == 0, \
+        f"stdout:\n{child_run.stdout}\nstderr:\n{child_run.stderr}"
+    assert "COMM_OK" in child_run.stdout

@@ -117,7 +117,9 @@ def test_stacked_blocks_get_layer_axis_none(key):
 # ------------------------------------------------------------------
 
 def test_collective_parser_on_synthetic_hlo():
-    from repro.launch import dryrun
+    # hlo_stats, not dryrun: importing dryrun force-sets the 512-device
+    # host platform, which must never happen inside this suite
+    from repro.launch import hlo_stats as dryrun
     hlo = """
 HloModule jit_step
   %p0 = f32[16,128]{1,0} parameter(0)

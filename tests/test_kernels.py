@@ -41,8 +41,14 @@ def test_parle_update_multi_leaf_tree(key):
 # flash_attention
 # ------------------------------------------------------------------
 
-@pytest.mark.parametrize("T,bq,bk", [(128, 64, 64), (256, 128, 128),
-                                     (128, 128, 64), (64, 64, 64)])
+# tier-1 keeps one block-shape combo per head dim; the full sweep
+# rides the slow lane (CI kernel job runs with addopts overridden)
+@pytest.mark.parametrize("T,bq,bk", [
+    (128, 128, 64),
+    pytest.param(128, 64, 64, marks=pytest.mark.slow),
+    pytest.param(256, 128, 128, marks=pytest.mark.slow),
+    pytest.param(64, 64, 64, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("hd", [32, 64])
 def test_flash_attention_causal(T, bq, bk, hd, key):
     B, H = 2, 3
@@ -54,7 +60,11 @@ def test_flash_attention_causal(T, bq, bk, hd, key):
                                rtol=2e-5, atol=2e-5)
 
 
-@pytest.mark.parametrize("window", [16, 32, 100])
+@pytest.mark.parametrize("window", [
+    32,
+    pytest.param(16, marks=pytest.mark.slow),
+    pytest.param(100, marks=pytest.mark.slow),
+])
 def test_flash_attention_window(window, key):
     B, T, H, hd = 1, 128, 2, 32
     ks = jax.random.split(key, 3)
@@ -81,7 +91,12 @@ def test_flash_attention_dtypes(dtype, key):
 # ssd_scan
 # ------------------------------------------------------------------
 
-@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 32), (128, 128), (96, 32)])
+@pytest.mark.parametrize("T,chunk", [
+    (128, 128),
+    pytest.param(64, 16, marks=pytest.mark.slow),
+    pytest.param(128, 32, marks=pytest.mark.slow),
+    pytest.param(96, 32, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("N,P", [(16, 32), (64, 64)])
 def test_ssd_scan_vs_naive(T, chunk, N, P, key):
     B, nh = 2, 3
@@ -99,6 +114,7 @@ def test_ssd_scan_vs_naive(T, chunk, N, P, key):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_chunked_jnp_path_vs_naive(key):
     """The model's pure-jnp chunked path against the naive recurrence,
     including a resume-from-state (h0) case the kernel delegates."""

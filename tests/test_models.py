@@ -4,11 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import FAMILY_CONFIGS, make_batch
+from conftest import FAMILY_CONFIGS, family_params, make_batch
 from repro.models.model import build_model
 
 
-@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+@pytest.mark.parametrize("family", family_params())
 def test_forward_shapes_and_finiteness(family, key):
     cfg = FAMILY_CONFIGS[family]
     model = build_model(cfg)
@@ -22,7 +22,7 @@ def test_forward_shapes_and_finiteness(family, key):
     assert np.isfinite(np.asarray(logits)).all()
 
 
-@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+@pytest.mark.parametrize("family", family_params())
 def test_loss_and_grads_finite(family, key):
     cfg = FAMILY_CONFIGS[family]
     model = build_model(cfg)
@@ -37,7 +37,7 @@ def test_loss_and_grads_finite(family, key):
         assert np.isfinite(np.asarray(g)).all()
 
 
-@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+@pytest.mark.parametrize("family", family_params())
 def test_loss_decreases_under_sgd(family, key):
     cfg = FAMILY_CONFIGS[family]
     model = build_model(cfg)
@@ -89,8 +89,9 @@ def test_moe_grouped_dispatch_matches_flat(key):
     x = jax.random.normal(key, (2, 16, cfg.d_model))
     flat, _ = moe_mod.moe_forward(params, cfg, x)
     gcfg = dataclasses.replace(cfg, moe_groups=4)
+    from repro.utils.compat import use_mesh
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         grouped, _ = jax.jit(
             lambda p, x: moe_mod.moe_forward(p, gcfg, x))(params, x)
     np.testing.assert_allclose(np.asarray(grouped), np.asarray(flat),

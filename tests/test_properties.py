@@ -1,10 +1,18 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped wholesale when hypothesis is not installed (it is a dev-only
+dependency — see requirements-dev.txt); the invariants it fuzzes are
+each pinned by at least one deterministic test elsewhere in the suite.
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ParleConfig
 from repro.core import parle

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import FAMILY_CONFIGS, make_batch
+from conftest import FAMILY_CONFIGS, family_params, make_batch
 from repro.models.model import build_model
 
 TOL = 2e-4
@@ -29,7 +29,7 @@ def _full_and_incremental(cfg, key, T=17, prefix=16):
     return logits_full, lp, ld
 
 
-@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+@pytest.mark.parametrize("family", family_params())
 def test_prefill_matches_forward(family, key):
     cfg = FAMILY_CONFIGS[family]
     logits_full, lp, _ = _full_and_incremental(cfg, key)
@@ -38,7 +38,7 @@ def test_prefill_matches_forward(family, key):
                                rtol=TOL, atol=TOL)
 
 
-@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+@pytest.mark.parametrize("family", family_params())
 def test_decode_matches_forward(family, key):
     cfg = FAMILY_CONFIGS[family]
     logits_full, _, ld = _full_and_incremental(cfg, key)
@@ -55,6 +55,7 @@ def test_windowed_decode_matches_forward(key):
                                rtol=TOL, atol=TOL)
 
 
+@pytest.mark.slow
 def test_windowed_long_decode_ring_buffer(key):
     """Decode many tokens past the window; compare against full forward."""
     cfg = dataclasses.replace(FAMILY_CONFIGS["dense"], sliding_window=8)
@@ -75,6 +76,7 @@ def test_windowed_long_decode_ring_buffer(key):
                                    rtol=TOL, atol=TOL, err_msg=f"pos {t}")
 
 
+@pytest.mark.slow
 def test_decode_loop_greedy_consistency(key):
     """Greedy decode loop runs and produces valid token ids (all families)."""
     from repro.launch.steps import make_decode_step

@@ -44,6 +44,7 @@ def _train_parle(task, n=3, steps=300, bs=128, split=False, seed=0):
     return st
 
 
+@pytest.mark.slow
 def test_parle_generalizes_better_than_sgd(task):
     """Paper Table 1 (scaled): Parle's averaged model beats SGD on
     held-out error at matched per-replica step budget, while
@@ -70,6 +71,7 @@ def test_parle_replicas_stay_aligned(task):
     assert float(ensemble.replica_spread(pst.x)) < 0.2
 
 
+@pytest.mark.slow
 def test_split_data_parle_beats_split_sgd(task):
     """Paper §5 / Table 2: with data split across replicas, Parle's
     average model beats SGD trained on a single shard."""
@@ -102,6 +104,7 @@ def test_communication_amortization_accounting():
     assert parle_per_step * L == pytest.approx(elastic_per_step)
 
 
+@pytest.mark.slow
 def test_lm_parle_training_reduces_loss(key):
     """A reduced assigned-arch config (qwen2.5-3b smoke) trained with
     Parle on the token stream: loss decreases."""
