@@ -4,16 +4,21 @@ SGD, for each assigned architecture at full scale (analytic — no
 allocation), plus measured collective bytes from compiled HLO:
 
   * the dry-run JSONs when results/dryrun exists, and
-  * ``--mesh replica:n`` — compile the shard_map Parle step on a real
-    (host) device mesh and parse the one sync all-reduce out of the
-    optimized HLO, e.g.
+  * ``--mesh replica:n [--algo name]`` — compile any registered
+    algorithm's shard_map step on a real (host) device mesh and account
+    its collectives from the optimized HLO, e.g.
 
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python benchmarks/comm_volume.py --mesh replica:8
+      PYTHONPATH=src python benchmarks/comm_volume.py --mesh replica:8 \\
+        --host-devices 8 --algo elastic_sgd
 
-    which verifies end-to-end that the ONLY collective in the compiled
-    program is the Eq. (8d) replica mean — model-size bytes, once every
-    L steps (the paper's O(2nN/L) amortized-communication claim).
+    For parle this verifies end-to-end that the ONLY collective is the
+    Eq. (8d) replica mean — model-size bytes, once every L steps (the
+    O(2nN/L) amortized-communication claim); for elastic_sgd the same
+    all-reduce sits in the ENTRY computation and fires every step, so
+    the two ``amortized_bytes_per_step`` fields measure the paper's 25x
+    communication gap from compiled HLO.
 """
 from __future__ import annotations
 
@@ -42,14 +47,20 @@ def analytic_rows():
     return rows
 
 
-def measured_mesh_rows(mesh_spec: str, param_size: int):
-    """Compile the sharded Parle train step on ``mesh_spec`` and account
-    the collectives of its optimized HLO (per device)."""
+def measured_mesh_rows(mesh_spec: str, param_size: int,
+                       algo_name: str = "parle"):
+    """Compile any registered algorithm's sharded train step on
+    ``mesh_spec`` and account the collectives of its optimized HLO (per
+    device).  Entry-computation collectives fire EVERY step (Elastic-SGD
+    / data-parallel SGD: one model-size all-reduce per step); collectives
+    inside the sync conditional fire once every L steps (Parle) — so the
+    measured 25x Parle-vs-Elastic gap of §4.1 falls out of
+    ``amortized_bytes_per_step`` directly."""
     import jax
     import jax.numpy as jnp
 
     from repro.configs.base import ParleConfig
-    from repro.core import parle
+    from repro.core import registry
     from repro.launch.hlo_stats import collective_bytes
     from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
 
@@ -58,37 +69,46 @@ def measured_mesh_rows(mesh_spec: str, param_size: int):
     if raxis is None:
         raise SystemExit(f"--mesh {mesh_spec!r} has no replica axis")
     n = mesh.shape[raxis]
-    cfg = ParleConfig(n_replicas=n, L=L, batches_per_epoch=10)
+    algo = registry.get(algo_name)
+    cfg = algo.canonicalize_cfg(
+        ParleConfig(n_replicas=n, L=L, batches_per_epoch=10))
 
     def loss(p, b):
         return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
 
     params = {"w": jnp.zeros((param_size,), jnp.float32)}
-    state = parle.init(params, cfg)
+    state = algo.init(params, cfg)
     batch = {"t": jnp.zeros((n, 1), jnp.float32)}
-    step = parle.make_sharded_train_step(loss, cfg, mesh, replica_axis=raxis)
-    coll = collective_bytes(step.lower(state, batch).compile().as_text())
+    step = algo.make_sharded_step(loss, cfg, mesh, replica_axis=raxis)
+    hlo = step.lower(state, batch).compile().as_text()
+    coll = collective_bytes(hlo)
+    entry = collective_bytes(hlo, scope="entry")
 
-    # the sync all-reduce moves the LOCAL replica-mean: param_size f32
-    expected = param_size * 4
+    expected = param_size * 4            # the model-size (f32) all-reduce
     ar = coll["bytes"]["all-reduce"]
+    per_step = entry["bytes"]["all-reduce"]          # unconditional
+    amortized = per_step + (ar - per_step) / L       # + cond'l every L
     # the output contract is 3-field CSV: keep commas out of the name
     tag = mesh_spec.replace(":", "").replace(",", "_")
     return [
-        f"comm_mesh_{tag},0,"
+        f"comm_mesh_{algo_name}_{tag},0,"
         f"devices={n};params={param_size};"
         f"all_reduce_bytes_per_device={ar};"
+        f"per_step_bytes={per_step};"
         f"expected_sync_bytes={expected};"
         f"collective_counts={sum(coll['counts'].values())};"
-        f"amortized_bytes_per_step={ar / L:.1f}"
+        f"amortized_bytes_per_step={amortized:.1f}"
     ]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="",
-                    help="e.g. 'replica:8' — compile the shard_map Parle "
-                         "step on a host mesh and measure its collectives")
+                    help="e.g. 'replica:8' — compile the sharded step on "
+                         "a host mesh and measure its collectives")
+    ap.add_argument("--algo", default="parle",
+                    help="registered algorithm for the --mesh measurement "
+                         "(parle | entropy_sgd | elastic_sgd | sgd)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force XLA host device count (set before jax init)")
     ap.add_argument("--param-size", type=int, default=1 << 20,
@@ -116,7 +136,8 @@ def main(argv=None):
                            f"amortized_per_step={cb/L:.3e}")
     # measured: compiled shard_map step on a live (host) mesh
     if args.mesh:
-        out.extend(measured_mesh_rows(args.mesh, args.param_size))
+        out.extend(measured_mesh_rows(args.mesh, args.param_size,
+                                      algo_name=args.algo))
     for line in out:
         print(line)
     return out

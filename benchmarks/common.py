@@ -12,21 +12,24 @@ What is validated is the paper's *claims about orderings*:
   T3  split-data Parle < split-data Elastic-SGD < per-shard SGD (Table 2)
   T4  one-shot averaging catastrophic vs Parle average       (§1.2/Fig 1)
   T5  comm bytes per grad-eval: Parle = Elastic/L             (§4.1)
+
+Every algorithm trains through the unified ``Algorithm`` protocol
+(core/algorithm.py): one ``train_algo`` drives all four, and the
+paper-style step-decay ("drop eta 5x at 60% and 85% of the budget",
+§3.1 — applied to EVERY algorithm for a fair Table 1) rides the
+protocol's lr_schedule instead of per-phase re-jitting.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ParleConfig
-from repro.core import elastic_sgd, ensemble, entropy_sgd, parle
+from repro.core import registry
 from repro.data.synthetic import TeacherTask, replica_batches
 from repro.models.convnet import (classification_loss, error_rate, init_mlp,
                                   mlp_forward)
-from repro.optim import sgd
 
 LOSS_RAW = classification_loss(mlp_forward)
 LOSS_FN = lambda p, b: (LOSS_RAW(p, b)[0], ())
@@ -37,63 +40,60 @@ def make_task(seed=0):
     return TeacherTask(num_train=4096, num_test=1024, seed=seed)
 
 
-def train_sgd(task, steps, seed=0, shard=(0, 1), lr=0.1):
-    params = init_mlp(jax.random.PRNGKey(seed))
-    st = sgd.init(params)
-    # paper-style step decay: drop 5x at 60% and 85% of the budget
-    sched = sgd.step_decay_schedule(lr, [int(steps * .6), int(steps * .85)], 0.2)
-    step = jax.jit(sgd.make_train_step(LOSS_FN, sched))
+def bench_cfg(task, n, steps, lr=0.1, L=25):
+    """Paper hyper-parameters + the §3.1 annealing (5x drops at 60% and
+    85% of the budget) expressed as ParleConfig step-decay fields."""
+    return ParleConfig(n_replicas=n, L=L, lr=lr, lr_inner=lr,
+                       batches_per_epoch=task.batches_per_epoch(BS),
+                       lr_drop_steps=(int(steps * .6), int(steps * .85)),
+                       lr_drop_factor=0.2)
+
+
+def train_algo(name, task, steps, n=3, split=False, seed=0, L=25, lr=0.1):
+    """Train any registered algorithm; returns (final state, wall_s)."""
+    algo = registry.get(name)
+    cfg = algo.canonicalize_cfg(bench_cfg(task, n, steps, lr=lr, L=L))
+    st = algo.init(init_mlp(jax.random.PRNGKey(seed)), cfg)
+    step = jax.jit(algo.make_step(LOSS_FN, cfg))
     t0 = time.time()
     for i in range(steps):
-        st, _ = step(st, task.train_batch(i, BS, shard=shard))
-    return st.params, time.time() - t0
+        st, _ = step(st, replica_batches(task, i, BS, cfg.n_replicas,
+                                         split=split))
+    return st, time.time() - t0
 
 
-def parle_cfg(task, n, L=25, lr=0.1):  # noqa: D103
-    return ParleConfig(n_replicas=n, L=L, lr=lr, lr_inner=lr,
-                       batches_per_epoch=task.batches_per_epoch(BS))
+def deployable(name, state):
+    return registry.get(name).deployable(state)
 
 
-def _lr_phases(steps, lr):
-    """Paper-style annealing: drop eta 5x at 60% and again at 85% of the
-    budget ("we drop eta by a factor of 5-10 when the validation error
-    plateaus", §3.1) — applied to EVERY algorithm for a fair Table 1."""
-    return [(int(steps * .6), lr), (int(steps * .25), lr / 5),
-            (steps - int(steps * .6) - int(steps * .25), lr / 25)]
+# ---- per-algorithm wrappers (table2/fig1 call these directly) -------
+
+def train_sgd(task, steps, seed=0, shard=(0, 1), lr=0.1):
+    """SGD on a fixed data shard (table 2's per-shard baseline); returns
+    (params, wall_s).  shard=(0, 1) is full-data SGD."""
+    algo = registry.get("sgd")
+    cfg = algo.canonicalize_cfg(bench_cfg(task, 1, steps, lr=lr))
+    st = algo.init(init_mlp(jax.random.PRNGKey(seed)), cfg)
+    step = jax.jit(algo.make_step(LOSS_FN, cfg))
+    t0 = time.time()
+    for i in range(steps):
+        b = task.train_batch(i, BS, shard=shard)
+        st, _ = step(st, jax.tree.map(lambda v: v[None], b))
+    return algo.deployable(st), time.time() - t0
 
 
 def train_parle(task, n, steps, split=False, seed=0, L=25, lr=0.1):
-    import dataclasses
-    cfg = parle_cfg(task, n, L=L, lr=lr)
-    st = parle.init(init_mlp(jax.random.PRNGKey(seed)), cfg)
-    t0 = time.time()
-    i = 0
-    for phase_steps, phase_lr in _lr_phases(steps, lr):
-        pcfg = dataclasses.replace(cfg, lr=phase_lr, lr_inner=phase_lr)
-        step = jax.jit(parle.make_train_step(LOSS_FN, pcfg))
-        for _ in range(phase_steps):
-            st, _ = step(st, replica_batches(task, i, BS, n, split=split))
-            i += 1
-    return st, time.time() - t0
+    return train_algo("parle", task, steps, n=n, split=split, seed=seed,
+                      L=L, lr=lr)
 
 
 def train_entropy(task, steps, seed=0, L=25, lr=0.1):
-    return train_parle(task, 1, steps, seed=seed, L=L, lr=lr)
+    return train_algo("entropy_sgd", task, steps, n=1, seed=seed, L=L, lr=lr)
 
 
 def train_elastic(task, n, steps, split=False, seed=0, lr=0.1):
-    import dataclasses
-    cfg = parle_cfg(task, n, lr=lr)
-    st = elastic_sgd.init(init_mlp(jax.random.PRNGKey(seed)), cfg)
-    t0 = time.time()
-    i = 0
-    for phase_steps, phase_lr in _lr_phases(steps, lr):
-        pcfg = dataclasses.replace(cfg, lr=phase_lr)
-        step = jax.jit(elastic_sgd.make_train_step(LOSS_FN, pcfg))
-        for _ in range(phase_steps):
-            st, _ = step(st, replica_batches(task, i, BS, n, split=split))
-            i += 1
-    return st, time.time() - t0
+    return train_algo("elastic_sgd", task, steps, n=n, split=split,
+                      seed=seed, lr=lr)
 
 
 def errors(params, task):

@@ -1,27 +1,26 @@
 """Table 1 analogue: Parle vs Elastic-SGD vs Entropy-SGD vs SGD —
 validation error (%) and wall-clock at matched per-replica step budget,
-plus the §4.5 train-error comparison (Parle under-fits)."""
+plus the §4.5 train-error comparison (Parle under-fits).  All four
+algorithms run through the unified Algorithm protocol: one loop, the
+registry carries the differences."""
 from __future__ import annotations
 
-from benchmarks.common import (errors, make_task, train_elastic,
-                               train_entropy, train_parle, train_sgd)
-from repro.core import parle
-
+from benchmarks.common import deployable, errors, make_task, train_algo
 
 import numpy as np
+
+# (name, replica count) — None means "the table's n"; the single-model
+# baselines (SGD, Entropy-SGD) stay at 1 as in the paper's Table 1
+ALGOS = (("sgd", 1), ("entropy_sgd", 1), ("elastic_sgd", None),
+         ("parle", None))
 
 
 def run_one(steps: int, n: int, seed: int):
     task = make_task(seed)
     rows = []
-    sgd_params, t_sgd = train_sgd(task, steps, seed=seed)
-    rows.append(("sgd",) + errors(sgd_params, task) + (t_sgd,))
-    est, t_e = train_entropy(task, steps, seed=seed)
-    rows.append(("entropy_sgd",) + errors(parle.average_model(est), task) + (t_e,))
-    elt, t_el = train_elastic(task, n, steps, seed=seed)
-    rows.append(("elastic_sgd",) + errors(elt.ref, task) + (t_el,))
-    pst, t_p = train_parle(task, n, steps, seed=seed)
-    rows.append(("parle",) + errors(parle.average_model(pst), task) + (t_p,))
+    for name, algo_n in ALGOS:
+        st, wall = train_algo(name, task, steps, n=algo_n or n, seed=seed)
+        rows.append((name,) + errors(deployable(name, st), task) + (wall,))
     return rows
 
 

@@ -1,4 +1,6 @@
-"""Quickstart: Parle vs SGD in ~1 minute on CPU.
+"""Quickstart: Parle vs SGD in ~1 minute on CPU, through the unified
+``Algorithm`` protocol (see README "API"): every optimizer in the repo
+— parle, entropy_sgd, elastic_sgd, sgd — is driven by the SAME loop.
 
 Trains the same MLP classifier with (a) data-parallel SGD and (b) Parle
 with 3 replicas (paper hyper-parameters: L=25, alpha=0.75, gamma0=100,
@@ -13,11 +15,23 @@ import time
 import jax
 
 from repro.configs.base import ParleConfig
-from repro.core import ensemble, parle
+from repro.core import registry
 from repro.data.synthetic import TeacherTask, replica_batches
 from repro.models.convnet import (classification_loss, error_rate, init_mlp,
                                   mlp_forward)
-from repro.optim import sgd
+
+
+def train(algo_name, task, loss_fn, params, cfg, steps, bs):
+    """The whole training loop, for ANY registered algorithm."""
+    algo = registry.get(algo_name)
+    cfg = algo.canonicalize_cfg(cfg)
+    state = algo.init(params, cfg)
+    step = jax.jit(algo.make_step(loss_fn, cfg))
+    t0 = time.time()
+    for i in range(steps):
+        state, metrics = step(state, replica_batches(task, i, bs,
+                                                     cfg.n_replicas))
+    return algo.deployable(state), state, time.time() - t0
 
 
 def main():
@@ -32,39 +46,33 @@ def main():
     params = init_mlp(jax.random.PRNGKey(0))
     bs = 128
 
-    # ---- SGD baseline -------------------------------------------
-    st = sgd.init(params)
-    step = jax.jit(sgd.make_train_step(loss_fn, 0.1))
-    t0 = time.time()
-    for i in range(args.steps):
-        st, _ = step(st, task.train_batch(i, bs))
-    t_sgd = time.time() - t0
-    sgd_test = float(error_rate(mlp_forward, st.params, task.test_batch()))
-    sgd_train = float(error_rate(mlp_forward, st.params,
-                                 {"x": task.x_train, "y": task.y_train}))
+    def cfg(n):
+        return ParleConfig(n_replicas=n, L=25, lr=0.1, lr_inner=0.1,
+                           batches_per_epoch=task.batches_per_epoch(bs))
 
-    # ---- Parle (paper §3.1 defaults) ----------------------------
-    pcfg = ParleConfig(n_replicas=args.replicas, L=25, lr=0.1, lr_inner=0.1,
-                       batches_per_epoch=task.batches_per_epoch(bs))
-    pst = parle.init(params, pcfg)
-    pstep = jax.jit(parle.make_train_step(loss_fn, pcfg))
-    t0 = time.time()
-    for i in range(args.steps):
-        pst, _ = pstep(pst, replica_batches(task, i, bs, args.replicas))
-    t_parle = time.time() - t0
-    avg = parle.average_model(pst)
-    parle_test = float(error_rate(mlp_forward, avg, task.test_batch()))
-    parle_train = float(error_rate(mlp_forward, avg,
-                                   {"x": task.x_train, "y": task.y_train}))
+    # ---- identical driver code for both algorithms ----------------
+    sgd_model, _, t_sgd = train("sgd", task, loss_fn, params, cfg(1),
+                                args.steps, bs)
+    parle_model, pst, t_parle = train("parle", task, loss_fn, params,
+                                      cfg(args.replicas), args.steps, bs)
+
+    def errs(model):
+        return (float(error_rate(mlp_forward, model, task.test_batch())),
+                float(error_rate(mlp_forward, model,
+                                 {"x": task.x_train, "y": task.y_train})))
+
+    sgd_test, sgd_train = errs(sgd_model)
+    parle_test, parle_train = errs(parle_model)
 
     print(f"{'':14}{'test err':>10}{'train err':>11}{'wall (s)':>10}")
     print(f"{'SGD':14}{sgd_test:10.4f}{sgd_train:11.4f}{t_sgd:10.1f}")
     print(f"{'Parle n=' + str(args.replicas):14}"
           f"{parle_test:10.4f}{parle_train:11.4f}{t_parle:10.1f}")
-    print(f"\nreplica overlap: {float(ensemble.replica_overlap(pst.x)):.4f}"
+    diag = registry.get("parle").diagnostics(pst)
+    print(f"\nreplica overlap: {diag['overlap']:.4f}"
           f"   (elastic coupling keeps replicas aligned, paper §1.2)")
-    print(f"scopes at end:  gamma={float(pst.scopes.gamma):.2f} "
-          f"rho={float(pst.scopes.rho):.3f}   (Eq. 9 scoping)")
+    print(f"scopes at end:  gamma={diag['gamma']:.2f} "
+          f"rho={diag['rho']:.3f}   (Eq. 9 scoping)")
     assert parle_test <= sgd_test + 0.02, "Parle should generalize >= SGD"
 
 

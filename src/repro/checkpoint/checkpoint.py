@@ -38,20 +38,46 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save(path: str, tree: Any, step: int = 0, meta: dict | None = None):
+def save(path: str, tree: Any, step: int = 0, meta: dict | None = None,
+         algo: str | None = None):
+    """``algo`` stamps the writing algorithm's registry name into the
+    sidecar; :func:`restore` validates it (a ParleState must not be
+    silently reinterpreted as, say, an ElasticState)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = _flatten_with_paths(tree)
     np.savez(path, **flat)
+    meta = dict(meta or {})
+    if algo is not None:
+        meta["algo"] = algo
     sidecar = {"step": int(step), "keys": sorted(flat.keys()),
-               "meta": meta or {}}
+               "meta": meta}
     with open(path + ".json", "w") as f:
         json.dump(sidecar, f, indent=1)
 
 
-def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+def saved_meta(path: str) -> dict:
     if not path.endswith(".npz"):
         path = path + ".npz"
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("meta", {})
+    except FileNotFoundError:       # sidecar-less (foreign) checkpoint
+        return {}
+
+
+def restore(path: str, like: Any, algo: str | None = None) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved).
+
+    ``algo``: expected algorithm name; raises ValueError when the
+    checkpoint's sidecar was stamped by a different algorithm."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    if algo is not None:
+        stamped = saved_meta(path).get("algo")
+        if stamped is not None and stamped != algo:
+            raise ValueError(
+                f"checkpoint {path!r} was written by algo {stamped!r}; "
+                f"refusing to restore it as {algo!r}")
     data = np.load(path)
     flat_like, treedef = _flatten_with_paths(like)
     leaves = []
@@ -70,5 +96,7 @@ def restore(path: str, like: Any) -> Any:
 
 
 def latest_step(path: str) -> int:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
     with open(path + ".json") as f:
         return json.load(f)["step"]

@@ -160,6 +160,13 @@ class ParleConfig:
     batches_per_epoch: int = 390 # B in Eq. (9) scoping schedule
     scale_lr_by_gamma: bool = True   # Remark 1: eta <- eta * gamma for the z-term
     mode: str = "parle"          # parle | entropy_sgd | elastic_sgd (baselines)
+    # §4 step-decay schedule ("dropped by a factor of 5-10 at epochs ..."):
+    # at each boundary step, lr AND lr_inner are multiplied by
+    # lr_drop_factor.  () disables the schedule.  Algorithms consume this
+    # through the Algorithm protocol's lr_schedule argument
+    # (core/algorithm.py), so the same schedule drives all four.
+    lr_drop_steps: Tuple[int, ...] = ()
+    lr_drop_factor: float = 0.2
 
     def scoping_factor(self) -> float:
         return 1.0 - 1.0 / (2.0 * self.batches_per_epoch)

@@ -4,7 +4,11 @@ addition of rho-scoping (§2.4, §4.4).
 Unlike Parle, the elastic coupling fires on EVERY step: each worker
 takes a gradient step with the elastic term, and the reference x moves
 toward the replica mean.  Communication: one all-reduce per step —
-the O(2nN) cost Parle amortizes to O(2nN/L).
+the O(2nN) cost Parle amortizes to O(2nN/L).  The sharded path below
+states that in mesh terms: the replica mean of (7b) is a pmean over the
+``replica`` mesh axis fired unconditionally each step, so the compiled
+HLO carries one model-size all-reduce per step (asserted by
+tests/test_algorithm_api.py via launch/hlo_stats.py).
 
     x^a <- x^a - lr [grad f(x^a) + (x^a - x)/rho]     (7a), Nesterov mu
     x   <- x - lr_ref (x - mean_a x^a)                (7b)
@@ -18,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.scoping import Scopes, init_scopes, update_scopes
 from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
-                                tree_zeros_like)
+                                tree_unzip, tree_zeros_like)
 
 
 class ElasticState(NamedTuple):
@@ -39,23 +43,36 @@ def init(params, cfg) -> ElasticState:
     )
 
 
-def update(state: ElasticState, grads, cfg) -> ElasticState:
-    mu, lr = cfg.momentum, cfg.lr
+def update(state: ElasticState, grads, cfg, axis_name: str | None = None,
+           use_kernel: bool = False, lr_scale=1.0) -> ElasticState:
+    """One Eq. (7) step.  Local path (axis_name=None): the replica mean
+    is the leading-axis mean.  shard_map path: the global n replicas are
+    laid out as (devices, n_per_device), so the global mean = pmean over
+    the mesh axis of the LOCAL leading-axis mean — one model-size
+    all-reduce, fired EVERY step (the paper's O(2nN) baseline)."""
+    mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
 
-    def upd(x, v, g, r):
-        g_e = g + inv_rho * (x - r[None])
-        v_new = mu * v + g_e
-        return x - lr * (g_e + mu * v_new), v_new
+    if use_kernel:
+        # fused (7a): 3 reads of n x N + one shared N-sized ref read,
+        # 2 writes — same block machinery as the Parle sync kernel
+        from repro.kernels import ops as kops
+        x, v = kops.elastic_worker_update(
+            state.x, state.v, grads, state.ref,
+            inv_rho=inv_rho, lr=lr, mu=mu)
+    else:
+        def upd(x, v, g, r):
+            g_e = g + inv_rho * (x - r[None])
+            v_new = mu * v + g_e
+            return x - lr * (g_e + mu * v_new), v_new
 
-    out = jax.tree.map(upd, state.x, state.v, grads, state.ref)
-    treedef = jax.tree.structure(state.x)
-    leaves = treedef.flatten_up_to(out)
-    x = treedef.unflatten([l[0] for l in leaves])
-    v = treedef.unflatten([l[1] for l in leaves])
+        out = jax.tree.map(upd, state.x, state.v, grads, state.ref)
+        x, v = tree_unzip(state.x, out, 2)
 
     # (7b): x <- x - eta (x - mean_a x^a)   [plain eta, not eta/rho]
     xbar = tree_mean_axis0(x)                          # the all-reduce
+    if axis_name is not None:
+        xbar = jax.tree.map(lambda m: jax.lax.pmean(m, axis_name), xbar)
     ref = jax.tree.map(lambda r, m: r - lr * (r - m), state.ref, xbar)
 
     # scope rho once per "epoch-equivalent" L steps to mirror Eq. (9)
@@ -66,7 +83,12 @@ def update(state: ElasticState, grads, cfg) -> ElasticState:
     return ElasticState(x=x, ref=ref, v=v, step=step, scopes=scopes)
 
 
-def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0):
+def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
+                    use_kernel: bool, axis_name: str | None,
+                    lr_schedule=None):
+    """Shared body of the local and sharded train steps (cf.
+    parle._make_step_body)."""
+
     def replica_grad(params, batch):
         (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return loss, g
@@ -74,13 +96,53 @@ def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0):
     def step(state: ElasticState, batch):
         losses, grads = jax.vmap(replica_grad)(state.x, batch)
         if weight_decay:
-            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, state.x)
-        new_state = update(state, grads, cfg)
-        return new_state, {"loss": jnp.mean(losses),
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, state.x)
+        lr_scale = lr_schedule(state.step) if lr_schedule is not None else 1.0
+        new_state = update(state, grads, cfg, axis_name=axis_name,
+                           use_kernel=use_kernel, lr_scale=lr_scale)
+        loss = jnp.mean(losses)
+        if axis_name is not None:
+            loss = jax.lax.pmean(loss, axis_name)
+        return new_state, {"loss": loss,
                            "loss_per_replica": losses,
-                           "rho": new_state.scopes.rho}
+                           "rho": new_state.scopes.rho,
+                           "step": new_state.step}
 
     return step
+
+
+def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                    use_kernel: bool = False, lr_schedule=None):
+    """``batch`` leaves carry a leading replica axis of size n.
+    ``lr_schedule``: step -> multiplier on cfg.lr."""
+    return _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                           axis_name=None, lr_schedule=lr_schedule)
+
+
+def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
+                            replica_axis: str = "replica",
+                            weight_decay: float = 0.0,
+                            use_kernel: bool = False, lr_schedule=None):
+    """Distributed Elastic-SGD: workers shard their leading replica axis
+    over ``replica_axis``; the reference variable stays replicated (every
+    device applies the identical (7b) update to its copy).  One
+    model-size pmean all-reduce per step — 25x Parle's amortized traffic
+    at L=25, measurable via benchmarks/comm_volume.py --algo elastic_sgd.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition import (elastic_state_pspecs,
+                                          make_sharded_step_fn)
+
+    local_step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                                 axis_name=replica_axis,
+                                 lr_schedule=lr_schedule)
+    metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
+                    "rho": P(), "step": P()}
+    return make_sharded_step_fn(local_step, mesh, replica_axis,
+                                elastic_state_pspecs(replica_axis),
+                                metric_specs, cfg.n_replicas)
 
 
 def average_model(state: ElasticState):

@@ -21,9 +21,20 @@ def init(params, cfg):
     return parle.init(params, _n1(cfg))
 
 
-def make_train_step(loss_fn, cfg, weight_decay: float = 0.0, use_kernel: bool = False):
+def make_train_step(loss_fn, cfg, weight_decay: float = 0.0,
+                    use_kernel: bool = False, lr_schedule=None):
     return parle.make_train_step(loss_fn, _n1(cfg), weight_decay=weight_decay,
-                                 use_kernel=use_kernel)
+                                 use_kernel=use_kernel,
+                                 lr_schedule=lr_schedule)
+
+
+def make_sharded_train_step(loss_fn, cfg, mesh, replica_axis: str = "replica",
+                            weight_decay: float = 0.0,
+                            use_kernel: bool = False, lr_schedule=None):
+    return parle.make_sharded_train_step(
+        loss_fn, _n1(cfg), mesh, replica_axis=replica_axis,
+        weight_decay=weight_decay, use_kernel=use_kernel,
+        lr_schedule=lr_schedule)
 
 
 def average_model(state):

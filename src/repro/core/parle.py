@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.scoping import Scopes, init_scopes, update_scopes
 from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
-                                tree_zeros_like)
+                                tree_unzip, tree_zeros_like)
 
 
 class ParleState(NamedTuple):
@@ -81,9 +81,11 @@ def init_from_replicas(replica_params, cfg) -> ParleState:
 # Inner step (8a)-(8b)
 # ------------------------------------------------------------------
 
-def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> ParleState:
-    """grads: pytree with leading replica axis = grad f(y^a) per replica."""
-    mu, lr = cfg.momentum, cfg.lr_inner
+def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
+               lr_scale=1.0) -> ParleState:
+    """grads: pytree with leading replica axis = grad f(y^a) per replica.
+    ``lr_scale``: multiplier on lr_inner (step-decay schedules, §4)."""
+    mu, lr = cfg.momentum, cfg.lr_inner * lr_scale
     inv_gamma = 1.0 / state.scopes.gamma
     alpha = cfg.alpha
 
@@ -101,11 +103,7 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> Parle
             return y_new, z_new, v_new
 
         out = jax.tree.map(upd, state.y, state.z, state.v_y, grads, state.x)
-        treedef = jax.tree.structure(state.y)
-        leaves = treedef.flatten_up_to(out)
-        y = treedef.unflatten([l[0] for l in leaves])
-        z = treedef.unflatten([l[1] for l in leaves])
-        v_y = treedef.unflatten([l[2] for l in leaves])
+        y, z, v_y = tree_unzip(state.y, out, 3)
 
     return state._replace(y=y, z=z, v_y=v_y, step=state.step + 1)
 
@@ -115,8 +113,8 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False) -> Parle
 # ------------------------------------------------------------------
 
 def sync_step(state: ParleState, cfg, axis_name: str | None = None,
-              use_kernel: bool = False) -> ParleState:
-    mu, lr = cfg.momentum, cfg.lr
+              use_kernel: bool = False, lr_scale=1.0) -> ParleState:
+    mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
 
     # (8d) with eta'' = rho/n: the reference IS the replica mean.
@@ -151,10 +149,7 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
             return x_new, v_new
 
         out = jax.tree.map(upd, state.x, state.z, state.v_x, xbar)
-        treedef = jax.tree.structure(state.x)
-        leaves = treedef.flatten_up_to(out)
-        x = treedef.unflatten([l[0] for l in leaves])
-        v_x = treedef.unflatten([l[1] for l in leaves])
+        x, v_x = tree_unzip(state.x, out, 2)
 
     return ParleState(
         x=x, y=x, z=x,                    # reset y,z to x^a (paper: "we
@@ -166,13 +161,15 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
 
 
 def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
-               axis_name: str | None = None) -> ParleState:
+               axis_name: str | None = None, lr_scale=1.0) -> ParleState:
     """One Parle step: inner update + conditional sync (k/L integer)."""
-    state = inner_step(state, grads, cfg, use_kernel=use_kernel)
+    state = inner_step(state, grads, cfg, use_kernel=use_kernel,
+                       lr_scale=lr_scale)
     do_sync = (state.step % cfg.L) == 0
     return jax.lax.cond(do_sync,
                         lambda s: sync_step(s, cfg, axis_name=axis_name,
-                                            use_kernel=use_kernel),
+                                            use_kernel=use_kernel,
+                                            lr_scale=lr_scale),
                         lambda s: s,
                         state)
 
@@ -182,11 +179,14 @@ def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
 # ------------------------------------------------------------------
 
 def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
-                    use_kernel: bool, axis_name: str | None):
+                    use_kernel: bool, axis_name: str | None,
+                    lr_schedule=None):
     """Shared step body of the local and sharded train steps: per-replica
     grads (vmap over the leading axis) -> fused_step -> metrics.  With
     ``axis_name`` set, the leading axis holds only the LOCAL replicas and
-    the scalar loss metric is pmean'd to its global value."""
+    the scalar loss metric is pmean'd to its global value.
+    ``lr_schedule``: step -> multiplier on BOTH cfg.lr and cfg.lr_inner
+    (the paper fixes eta' to the initial eta, so they decay together)."""
 
     def replica_grad(params, batch):
         (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
@@ -197,8 +197,9 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
         if weight_decay:
             grads = jax.tree.map(lambda g, p: g + weight_decay * p,
                                  grads, state.y)
+        lr_scale = lr_schedule(state.step) if lr_schedule is not None else 1.0
         new_state = fused_step(state, grads, cfg, use_kernel=use_kernel,
-                               axis_name=axis_name)
+                               axis_name=axis_name, lr_scale=lr_scale)
         loss = jnp.mean(losses)
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
@@ -215,7 +216,7 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
 
 
 def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
-                    use_kernel: bool = False):
+                    use_kernel: bool = False, lr_schedule=None):
     """loss_fn(params, batch) -> (scalar, aux).  Returns
 
         step(state, batch) -> (state, metrics)
@@ -225,13 +226,13 @@ def make_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
     handled by the mesh ``data`` axis at the sharding layer).
     """
     return _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
-                           axis_name=None)
+                           axis_name=None, lr_schedule=lr_schedule)
 
 
 def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
                             replica_axis: str = "replica",
                             weight_decay: float = 0.0,
-                            use_kernel: bool = False):
+                            use_kernel: bool = False, lr_schedule=None):
     """Distributed variant of :func:`make_train_step`: the leading
     replica axis of ``ParleState`` (and of the batch) is sharded over
     the ``replica_axis`` of ``mesh`` via shard_map.
@@ -245,26 +246,20 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
     keep the same layout, so checkpointing / ``average_model`` work
     unchanged.
     """
-    from repro.sharding.partition import parle_state_pspecs
-    from repro.utils.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
-    n_dev = mesh.shape[replica_axis]
-    if cfg.n_replicas % n_dev != 0:
-        raise ValueError(
-            f"n_replicas={cfg.n_replicas} not divisible by "
-            f"mesh axis {replica_axis!r} of size {n_dev}")
+    from repro.sharding.partition import (make_sharded_step_fn,
+                                          parle_state_pspecs)
 
     # per-device shard: n_local = n / n_dev replicas on the leading axis
     local_step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
-                                 axis_name=replica_axis)
-    state_specs = parle_state_pspecs(replica_axis)
-    batch_specs = P(replica_axis)
+                                 axis_name=replica_axis,
+                                 lr_schedule=lr_schedule)
     metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
                     "gamma": P(), "rho": P(), "step": P()}
-    return jax.jit(shard_map(local_step, mesh,
-                             in_specs=(state_specs, batch_specs),
-                             out_specs=(state_specs, metric_specs)))
+    return make_sharded_step_fn(local_step, mesh, replica_axis,
+                                parle_state_pspecs(replica_axis),
+                                metric_specs, cfg.n_replicas)
 
 
 def average_model(state: ParleState):

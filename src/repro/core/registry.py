@@ -1,0 +1,40 @@
+"""Algorithm registry: one name -> one :class:`~repro.core.algorithm.Algorithm`.
+
+Every consumer (launch/train.py, launch/steps.py, benchmarks, examples)
+dispatches through ``get(name)`` instead of branching on algo names, so
+adding an algorithm is a single-site change: implement the protocol,
+call :func:`register`, and the ``--algo`` flag, the mesh path, the
+checkpoint stamping and the benchmarks all pick it up.
+
+The four built-ins (parle, entropy_sgd, elastic_sgd, sgd) register at
+``repro.core.algorithm`` import time; ``get``/``names`` trigger that
+import lazily so this module stays import-cycle-free.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+_ALGORITHMS: Dict[str, object] = {}
+
+
+def register(algo):
+    """Register an Algorithm instance under ``algo.name``.  Returns the
+    instance so it can be used as a decorator-ish one-liner."""
+    _ALGORITHMS[algo.name] = algo
+    return algo
+
+
+def _ensure_builtins():
+    from repro.core import algorithm  # noqa: F401  (registers on import)
+
+
+def get(name: str):
+    _ensure_builtins()
+    if name not in _ALGORITHMS:
+        raise KeyError(f"unknown algorithm {name!r}; known: {names()}")
+    return _ALGORITHMS[name]
+
+
+def names() -> list[str]:
+    _ensure_builtins()
+    return sorted(_ALGORITHMS)

@@ -49,3 +49,8 @@ def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu):
     return _pu.parle_sync_tree(x, z, v, xbar, gamma_scale=gamma_scale,
                                inv_rho=inv_rho, lr=lr, mu=mu,
                                interpret=_interpret())
+
+
+def elastic_worker_update(x, v, g, ref, *, inv_rho, lr, mu):
+    return _pu.elastic_update_tree(x, v, g, ref, inv_rho=inv_rho,
+                                   lr=lr, mu=mu, interpret=_interpret())

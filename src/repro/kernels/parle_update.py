@@ -151,6 +151,33 @@ def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True):
     return x2.reshape(r, m), v2.reshape(r, m)
 
 
+def _replicated_shared_tree(flat_fn, rep_trees, shared_tree, scalars,
+                            interpret):
+    """Shared leafwise driver for the two (R, M)-streams + one shared
+    M-stream kernels (sync: xbar; elastic: ref): pad each leaf up to the
+    block size, run the flat kernel, cut the padding."""
+    leaves0, treedef = jax.tree_util.tree_flatten(rep_trees[0])
+    rep_leaves = [leaves0] + [treedef.flatten_up_to(t) for t in rep_trees[1:]]
+    shared_leaves = treedef.flatten_up_to(shared_tree)
+    out_a, out_b = [], []
+    for group in zip(*rep_leaves, shared_leaves):
+        *reps, shared = group
+        lead = reps[0]
+        r = lead.shape[0]
+        size = shared.size
+        assert lead.size == r * size, (lead.shape, shared.shape)
+        pad = (-size) % BLOCK_ELEMS
+        fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
+                                  ((0, 0), (0, pad)))
+        na, nb = flat_fn(*[fl(l, r) for l in reps], fl(shared, 1)[0],
+                         scalars, interpret=interpret)
+        cut = lambda a: a[:, :size].reshape(lead.shape).astype(lead.dtype)
+        out_a.append(cut(na))
+        out_b.append(cut(nb))
+    un = jax.tree_util.tree_unflatten
+    return un(treedef, out_a), un(treedef, out_b)
+
+
 def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
                     interpret: bool = True):
     """Fused sync update (8c-8d) leafwise over pytrees.
@@ -160,22 +187,66 @@ def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
     by all R replicas.
     """
     scalars = _pack_scalars(gamma_scale, inv_rho, lr, mu)
-    leaves_x, treedef = jax.tree_util.tree_flatten(x)
-    leaves_z = treedef.flatten_up_to(z)
-    leaves_v = treedef.flatten_up_to(v)
-    leaves_b = treedef.flatten_up_to(xbar)
-    out_x, out_v = [], []
-    for lx, lz, lv, lb in zip(leaves_x, leaves_z, leaves_v, leaves_b):
-        r = lx.shape[0]
-        size = lb.size
-        assert lx.size == r * size, (lx.shape, lb.shape)
-        pad = (-size) % BLOCK_ELEMS
-        fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
-                                  ((0, 0), (0, pad)))
-        nx, nv = parle_sync_flat(fl(lx, r), fl(lz, r), fl(lv, r),
-                                 fl(lb, 1)[0], scalars, interpret=interpret)
-        cut = lambda a: a[:, :size].reshape(lx.shape).astype(lx.dtype)
-        out_x.append(cut(nx))
-        out_v.append(cut(nv))
-    un = jax.tree_util.tree_unflatten
-    return un(treedef, out_x), un(treedef, out_v)
+    return _replicated_shared_tree(parle_sync_flat, (x, z, v), xbar,
+                                   scalars, interpret)
+
+
+# ------------------------------------------------------------------
+# Elastic-SGD worker step (7a): same block machinery as the sync step —
+# per-replica streams plus ONE shared model-size stream (the reference
+# variable, analogous to xbar) re-read per replica grid step.
+# ------------------------------------------------------------------
+
+def _elastic_kernel(scal_ref, x_ref, v_ref, g_ref, ref_ref, x_out, v_out):
+    inv_rho = scal_ref[0]
+    lr = scal_ref[1]
+    mu = scal_ref[2]
+    x = x_ref[0]                       # (8, 1024); replica dim blocked at 1
+    g_e = g_ref[0] + inv_rho * (x - ref_ref[...])
+    v_new = mu * v_ref[0] + g_e
+    x_out[0] = x - lr * (g_e + mu * v_new)
+    v_out[0] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def elastic_update_flat(x, v, g, ref, scalars, interpret: bool = True):
+    """x, v, g: (R, M) f32; ref: (M,) f32 with M % BLOCK_ELEMS == 0;
+    scalars: (3,) f32 = [inv_rho, lr, mu].
+
+    ref is the shared reference variable: it stays at size M and is
+    re-read per replica grid step — never materialized at R*M, so the
+    worker step's HBM budget is 3 R*M + M reads and 2 R*M writes.
+    """
+    r, m = x.shape
+    rows = m // BLOCK[1]
+    grid = (r, rows // BLOCK[0])
+    shaped = lambda a: a.reshape(r, rows, BLOCK[1])
+    spec = pl.BlockSpec((1,) + BLOCK, lambda a, i, _s: (a, i, 0))
+    ref_spec = pl.BlockSpec(BLOCK, lambda a, i, _s: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((r, rows, BLOCK[1]), x.dtype)] * 2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[spec] * 3 + [ref_spec],
+        out_specs=[spec] * 2,
+    )
+    x2, v2 = pl.pallas_call(
+        _elastic_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, shaped(x), shaped(v), shaped(g),
+      ref.reshape(rows, BLOCK[1]))
+    return x2.reshape(r, m), v2.reshape(r, m)
+
+
+def elastic_update_tree(x, v, g, ref, *, inv_rho, lr, mu,
+                        interpret: bool = True):
+    """Fused Elastic-SGD worker update (7a) leafwise over pytrees.
+
+    x, v, g leaves carry the leading replica axis (R, ...); ref leaves
+    are the UN-broadcast reference variable of shape (...).
+    """
+    scalars = _pack_scalars(inv_rho, lr, mu)
+    return _replicated_shared_tree(elastic_update_flat, (x, v, g), ref,
+                                   scalars, interpret)

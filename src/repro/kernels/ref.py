@@ -51,6 +51,25 @@ def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu):
 
 
 # ------------------------------------------------------------------
+# elastic_update: fused Eq. (7a) worker update (Elastic-SGD)
+# ------------------------------------------------------------------
+
+def elastic_worker_update(x, v, g, ref, *, inv_rho, lr, mu):
+    """One fused Elastic-SGD worker step on flat arrays (ref is the
+    shared reference variable — its (7b) update is not the kernel's job).
+
+    g_e = g + inv_rho (x - ref)
+    v'  = mu v + g_e
+    x'  = x - lr (g_e + mu v')
+    Returns (x', v').
+    """
+    g_e = g + inv_rho * (x - ref)
+    v_new = mu * v + g_e
+    x_new = x - lr * (g_e + mu * v_new)
+    return x_new, v_new
+
+
+# ------------------------------------------------------------------
 # flash_attention: causal (optionally sliding-window) MHA
 # ------------------------------------------------------------------
 

@@ -34,14 +34,44 @@ def _type_bytes(type_str: str) -> int:
     return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
 
 
-def collective_bytes(hlo_text: str) -> dict:
+def entry_computation(hlo_text: str) -> str:
+    """The ENTRY computation's body of an optimized HLO module.
+
+    Collectives that live here run unconditionally on EVERY invocation
+    of the compiled step; collectives inside branch computations (e.g.
+    Parle's Eq. 8d all-reduce under the ``k % L == 0`` cond) only run
+    when their conditional fires.  That distinction is the paper's
+    per-step (Elastic-SGD, O(2nN)) vs per-L-steps (Parle, O(2nN/L))
+    communication claim, stated in compiled-HLO terms.
+    """
+    out, depth, active = [], 0, False
+    for line in hlo_text.splitlines():
+        if not active and line.lstrip().startswith("ENTRY"):
+            active = True
+        if active:
+            out.append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                break
+    return "\n".join(out)
+
+
+def collective_bytes(hlo_text: str, scope: str = "all") -> dict:
     """Sum operand bytes of every collective op in the optimized HLO.
 
     Post-optimization HLO operands are bare ids (no inline shapes), so a
     def-map id -> bytes is built first from every instruction's result
     type annotation.  ``*-done`` halves of async pairs are skipped (the
     ``*-start`` already carries the transfer).
+
+    ``scope="entry"`` restricts the accounting to the ENTRY computation
+    — the collectives that fire on every step (see
+    :func:`entry_computation`).
     """
+    if scope == "entry":
+        hlo_text = entry_computation(hlo_text)
+    elif scope != "all":
+        raise ValueError(f"scope must be 'all' or 'entry', got {scope!r}")
     defs: dict = {}
     coll_lines = []
     for line in hlo_text.splitlines():

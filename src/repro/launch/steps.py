@@ -1,27 +1,53 @@
 """Step functions shared by the trainer, the server, and the dry-run.
 
- * ``make_parle_steps``  — inner_step (8a-8b; no cross-replica traffic),
-   sync_step (8c-8d; the single cross-replica all-reduce), and the fused
-   per-step function used by the training loop.
- * ``make_sgd_step``     — the data-parallel SGD baseline (paper §4
-   comparison; also the paper-faithful Goyal-style baseline program).
+ * ``make_algorithm_step`` / ``make_algorithm_sharded_step`` — the ONE
+   training-step factory: any registered algorithm (parle, entropy_sgd,
+   elastic_sgd, sgd) by name, via ``repro.core.registry``.  No
+   per-algorithm branching lives here — the registry object carries it.
+ * ``make_parle_steps``  — the dry-run DECOMPOSITION of the Parle step
+   into inner_step (8a-8b; no cross-replica traffic) and sync_step
+   (8c-8d; the single cross-replica all-reduce), compiled as separate
+   programs so launch/dryrun.py can account their collectives
+   independently.  Analysis tooling, not driver dispatch.
  * ``make_prefill_step`` / ``make_decode_step`` — serving programs.
 """
 from __future__ import annotations
-
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import parle as parle_mod
+from repro.core import registry
 from repro.models.model import build_model
-from repro.optim import sgd as sgd_mod
 
 
 def make_loss_fn(cfg, use_flash: bool = False, remat: bool = False):
     model = build_model(cfg, use_flash=use_flash, remat=remat)
     return model.loss
+
+
+def make_algorithm_step(algo_name: str, cfg, pcfg, weight_decay: float = 0.0,
+                        use_flash: bool = False, remat: bool = False,
+                        use_kernel: bool = False, lr_schedule=None):
+    """step(state, batch) -> (state, metrics) for any registered algo.
+    ``batch`` leaves carry a leading replica axis of pcfg.n_replicas."""
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
+    return registry.get(algo_name).make_step(
+        loss_fn, pcfg, weight_decay=weight_decay, use_kernel=use_kernel,
+        lr_schedule=lr_schedule)
+
+
+def make_algorithm_sharded_step(algo_name: str, cfg, pcfg, mesh,
+                                replica_axis: str = "replica",
+                                weight_decay: float = 0.0,
+                                use_flash: bool = False, remat: bool = False,
+                                use_kernel: bool = False, lr_schedule=None):
+    """The shard_map variant: replica axis sharded over ``replica_axis``."""
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
+    return registry.get(algo_name).make_sharded_step(
+        loss_fn, pcfg, mesh, replica_axis=replica_axis,
+        weight_decay=weight_decay, use_kernel=use_kernel,
+        lr_schedule=lr_schedule)
 
 
 def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,
@@ -62,13 +88,6 @@ def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,
     return inner_step, sync_step, fused_step
 
 
-def make_sgd_step(cfg, lr=0.1, momentum=0.9, weight_decay: float = 0.0,
-                  use_flash: bool = False, remat: bool = False):
-    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
-    return sgd_mod.make_train_step(loss_fn, lr, momentum=momentum,
-                                   weight_decay=weight_decay)
-
-
 def make_prefill_step(cfg, use_flash: bool = False):
     model = build_model(cfg, use_flash=use_flash)
 
@@ -89,5 +108,4 @@ def make_decode_step(cfg):
         else:
             next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return next_tok, cache
-
     return decode

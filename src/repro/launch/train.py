@@ -3,11 +3,16 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \\
         --algo parle --replicas 2 --steps 60 --batch 4 --seq 64
 
-Runs the Parle / Entropy-SGD / Elastic-SGD / SGD training loop on the
-synthetic token stream, with checkpointing and the replica-diagnostic
-metrics from §1.2 (overlap / spread).  On a real TPU slice the same
-driver runs under a production mesh (``--mesh parle:n``); on this CPU
-container use ``--smoke`` (reduced config, host mesh).
+Runs any registered algorithm (``repro.core.registry``: parle,
+entropy_sgd, elastic_sgd, sgd) through ONE driver code path — no
+per-algorithm branching: ``--algo`` resolves an ``Algorithm`` object and
+the loop only ever talks to the protocol (init / make_step /
+make_sharded_step / deployable / diagnostics).  Trains on the synthetic
+token stream with checkpointing (algo-stamped sidecars) and the
+replica-diagnostic metrics from §1.2 (overlap / spread).  On a real TPU
+slice the same driver runs under a production mesh (``--mesh
+replica:n``); on this CPU container use ``--smoke`` (reduced config,
+host mesh) plus ``--host-devices n``.
 """
 from __future__ import annotations
 
@@ -16,42 +21,48 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ParleConfig, get_config, smoke_variant
-from repro.core import elastic_sgd, ensemble, parle
+from repro.core import registry
 from repro.data.synthetic import TokenStream, replica_batches
 from repro.models.model import build_model
-from repro.optim import sgd
 
 
 def build_argparser():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config of the same family (CPU-runnable)")
-    ap.add_argument("--algo", default="parle",
-                    choices=["parle", "entropy_sgd", "elastic_sgd", "sgd"])
-    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--algo", default="parle", choices=registry.names())
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="replica count (sgd: data-parallel shards); 0 = "
+                         "the mesh replica-axis size, or 3 without --mesh")
     ap.add_argument("--L", type=int, default=25)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4, help="per-replica batch")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--lr-drop-steps", default="",
+                    help="comma-separated step boundaries where lr (and "
+                         "lr_inner) drop by --lr-drop-factor (paper §4)")
+    ap.add_argument("--lr-drop-factor", type=float, default=0.2)
     ap.add_argument("--split-data", action="store_true",
                     help="paper §5: each replica sees a disjoint shard")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="fused Pallas parle_update (interpret on CPU)")
+                    help="fused Pallas updates (interpret on CPU)")
     ap.add_argument("--mesh", default="",
                     help="shard replicas over a device mesh, e.g. "
-                         "'replica:4' (parle/entropy_sgd only); the sync "
-                         "mean lowers to one all-reduce every L steps")
+                         "'replica:4'; parle syncs lower to one all-reduce "
+                         "every L steps, elastic_sgd/sgd to one per step")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force this many XLA host-platform devices "
                          "(CPU-only; must be set before jax initializes)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", default="",
+                    help="checkpoint path to restore (validates that it "
+                         "was written by the same --algo)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     return ap
@@ -71,69 +82,61 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
 
-    n = args.replicas if args.algo in ("parle", "elastic_sgd") else 1
-    pcfg = ParleConfig(n_replicas=n, L=args.L, lr=args.lr, lr_inner=args.lr,
-                       batches_per_epoch=max(args.steps // 4, 1),
-                       mode=args.algo)
+    algo = registry.get(args.algo)
+    mesh, raxis = None, None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+        mesh = make_mesh_from_spec(args.mesh)
+        raxis = replica_axis_of(mesh)
+        if raxis is None:
+            raise SystemExit(f"--mesh {args.mesh!r} has no replica axis")
+    n = args.replicas or (mesh.shape[raxis] if mesh is not None else 3)
+    drops = tuple(int(s) for s in args.lr_drop_steps.split(",") if s)
+    pcfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=n, L=args.L, lr=args.lr, lr_inner=args.lr,
+        batches_per_epoch=max(args.steps // 4, 1),
+        lr_drop_steps=drops, lr_drop_factor=args.lr_drop_factor))
+    n = pcfg.n_replicas                 # canonicalized (entropy_sgd -> 1)
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                          batch_size=args.batch, seed=args.seed)
 
-    if args.algo == "sgd":
-        state = sgd.init(params)
-        step_fn = jax.jit(sgd.make_train_step(model.loss, args.lr))
-        get_params = lambda s: s.params
-    elif args.algo == "elastic_sgd":
-        state = elastic_sgd.init(params, pcfg)
-        step_fn = jax.jit(elastic_sgd.make_train_step(model.loss, pcfg))
-        get_params = elastic_sgd.average_model
-    else:  # parle / entropy_sgd (= parle n=1)
-        if args.algo == "entropy_sgd":
-            pcfg = ParleConfig(n_replicas=1, L=args.L, lr=args.lr,
-                               lr_inner=args.lr,
-                               batches_per_epoch=max(args.steps // 4, 1))
-            n = 1
-        state = parle.init(params, pcfg)
-        if args.mesh:
-            from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
-            mesh = make_mesh_from_spec(args.mesh)
-            raxis = replica_axis_of(mesh)
-            if raxis is None:
-                raise SystemExit(f"--mesh {args.mesh!r} has no replica axis")
-            step_fn = parle.make_sharded_train_step(
-                model.loss, pcfg, mesh, replica_axis=raxis,
-                use_kernel=args.use_kernel)
-            print(json.dumps({"mesh": dict(mesh.shape),
-                              "replica_axis": raxis,
-                              "replicas_per_device": n // mesh.shape[raxis]}))
-        else:
-            step_fn = jax.jit(parle.make_train_step(
-                model.loss, pcfg, use_kernel=args.use_kernel))
-        get_params = parle.average_model
+    state = algo.init(params, pcfg)
+    start = 0
+    if args.resume:
+        state = ckpt.restore(args.resume, state, algo=args.algo)
+        try:                    # continue the stream + checkpoint numbering
+            start = ckpt.latest_step(args.resume)
+        except FileNotFoundError:       # sidecar-less foreign checkpoint
+            start = 0
+    if mesh is not None:
+        step_fn = algo.make_sharded_step(model.loss, pcfg, mesh,
+                                         replica_axis=raxis,
+                                         use_kernel=args.use_kernel)
+        print(json.dumps({"mesh": dict(mesh.shape), "replica_axis": raxis,
+                          "replicas_per_device": n // mesh.shape[raxis]}))
+    else:
+        step_fn = jax.jit(algo.make_step(model.loss, pcfg,
+                                         use_kernel=args.use_kernel))
 
     t0 = time.time()
     history = []
-    for i in range(args.steps):
-        if args.algo == "sgd":
-            batch = stream.batch(i)
-        else:
-            batch = replica_batches(stream, i, args.batch, n,
-                                    split=args.split_data)
+    for i in range(start, start + args.steps):
+        batch = replica_batches(stream, i, args.batch, n,
+                                split=args.split_data)
         state, metrics = step_fn(state, batch)
-        if (i + 1) % args.log_every == 0 or i == 0:
+        if (i + 1) % args.log_every == 0 or i == start:
             rec = {"step": i + 1, "loss": round(float(metrics["loss"]), 4),
                    "wall_s": round(time.time() - t0, 1)}
-            if args.algo in ("parle", "entropy_sgd"):
-                rec["gamma"] = round(float(state.scopes.gamma), 3)
-                rec["rho"] = round(float(state.scopes.rho), 4)
-                rec["overlap"] = round(float(ensemble.replica_overlap(state.x)), 4)
+            rec.update({k: round(v, 4)
+                        for k, v in algo.diagnostics(state).items()})
             print(json.dumps(rec), flush=True)
             history.append(rec)
         if (args.checkpoint_every and args.checkpoint_dir
                 and (i + 1) % args.checkpoint_every == 0):
             ckpt.save(f"{args.checkpoint_dir}/step{i+1:06d}.npz", state,
-                      step=i + 1, meta={"arch": cfg.name, "algo": args.algo})
+                      step=i + 1, meta={"arch": cfg.name}, algo=args.algo)
 
-    final = get_params(state)
+    final = algo.deployable(state)
     loss, _ = jax.jit(model.loss)(final, _eval_batch(stream, cfg))
     print(json.dumps({"final_eval_loss": round(float(loss), 4),
                       "algo": args.algo, "arch": cfg.name,

@@ -9,7 +9,7 @@ from typing import Any, Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.utils.pytree import tree_zeros_like
+from repro.utils.pytree import tree_unzip, tree_zeros_like
 
 
 class SGDState(NamedTuple):
@@ -44,10 +44,7 @@ def update(state: SGDState, grads, lr, momentum: float = 0.9,
         return p - lr * (g + momentum * v_new), v_new   # Nesterov
 
     out = jax.tree.map(upd, state.params, state.v, grads)
-    treedef = jax.tree.structure(state.params)
-    leaves = treedef.flatten_up_to(out)
-    params = treedef.unflatten([l[0] for l in leaves])
-    v = treedef.unflatten([l[1] for l in leaves])
+    params, v = tree_unzip(state.params, out, 2)
     return SGDState(params=params, v=v, step=state.step + 1)
 
 
@@ -61,3 +58,69 @@ def make_train_step(loss_fn: Callable, lr_schedule, momentum: float = 0.9,
         return new_state, {"loss": loss, "lr": lr}
 
     return step
+
+
+# ------------------------------------------------------------------
+# Algorithm-protocol step bodies (core/algorithm.py): the batch carries
+# a leading shard axis of size n and SGD treats it as plain data
+# parallelism — per-shard grads are averaged every step (the L=1,
+# rho->infty degenerate member of the Parle family; cf. §2.1).
+# ------------------------------------------------------------------
+
+def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
+                    axis_name: str | None, lr_schedule):
+    """Shared body of the local and sharded data-parallel steps.  With
+    ``axis_name`` set, the leading batch axis holds only the LOCAL
+    shards and grads/loss are pmean'd over the mesh axis."""
+
+    def shard_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def step(state: SGDState, batch):
+        losses, grads = jax.vmap(shard_grad, in_axes=(None, 0))(
+            state.params, batch)
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        loss = jnp.mean(losses)
+        if axis_name is not None:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+            loss = jax.lax.pmean(loss, axis_name)
+        scale = lr_schedule(state.step) if lr_schedule is not None else 1.0
+        lr = cfg.lr * scale
+        new_state = update(state, grads, lr, cfg.momentum, weight_decay)
+        return new_state, {"loss": loss, "lr": lr}
+
+    return step
+
+
+def make_replica_train_step(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                            lr_schedule=None):
+    """Protocol-shaped SGD step: ``batch`` leaves carry a leading shard
+    axis of size cfg.n_replicas; grads are averaged across shards every
+    step (one model copy, n-times-larger effective batch).
+    ``lr_schedule``: step -> multiplier applied to cfg.lr."""
+    return _make_step_body(loss_fn, cfg, weight_decay, None, lr_schedule)
+
+
+def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
+                            replica_axis: str = "replica",
+                            weight_decay: float = 0.0,
+                            use_kernel: bool = False,
+                            lr_schedule=None):
+    """Data-parallel SGD over a device mesh: the batch's leading shard
+    axis is sharded over ``replica_axis``; params and optimizer state
+    stay replicated, and the per-step grad mean lowers to one model-size
+    all-reduce per step — the O(2nN) baseline of §4.1.
+
+    ``use_kernel`` is accepted for protocol uniformity (SGD's update is
+    a single fused-multiply stream; XLA already emits it fused)."""
+    del use_kernel
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition import make_sharded_step_fn, sgd_state_pspecs
+
+    local_step = _make_step_body(loss_fn, cfg, weight_decay, replica_axis,
+                                 lr_schedule)
+    return make_sharded_step_fn(local_step, mesh, replica_axis,
+                                sgd_state_pspecs(), {"loss": P(), "lr": P()},
+                                cfg.n_replicas)

@@ -135,6 +135,43 @@ def parle_state_pspecs(replica_axis: str):
                       step=P(), scopes=P())
 
 
+def elastic_state_pspecs(replica_axis: str):
+    """Prefix-spec tree for an ``ElasticState``: workers and their
+    momentum shard the leading replica axis; the reference variable is
+    replicated (every device applies the identical Eq. (7b) update)."""
+    from repro.core.elastic_sgd import ElasticState
+    rep = P(replica_axis)
+    return ElasticState(x=rep, ref=P(), v=rep, step=P(), scopes=P())
+
+
+def sgd_state_pspecs():
+    """Prefix-spec tree for an ``SGDState`` under the data-parallel mesh
+    path: params and momentum replicated (grads are pmean'd, so every
+    device holds the identical model)."""
+    from repro.optim.sgd import SGDState
+    return SGDState(params=P(), v=P(), step=P())
+
+
+def make_sharded_step_fn(local_step, mesh, replica_axis: str, state_specs,
+                         metric_specs, n_replicas: int):
+    """The one jit(shard_map) wrapper behind every Algorithm's sharded
+    path: batch's leading replica axis sharded over ``replica_axis``,
+    state per ``state_specs``.  ``n_replicas`` is validated against the
+    mesh so each device gets a whole number of replicas."""
+    import jax
+
+    from repro.utils.compat import shard_map
+
+    n_dev = mesh.shape[replica_axis]
+    if n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+    return jax.jit(shard_map(local_step, mesh,
+                             in_specs=(state_specs, P(replica_axis)),
+                             out_specs=(state_specs, metric_specs)))
+
+
 def sanitize_pspecs(pspec_tree, sds_tree, mesh: Mesh):
     """Drop mesh axes that do not evenly divide the corresponding array
     dimension — pjit ARGUMENT shardings must divide exactly (vocab sizes

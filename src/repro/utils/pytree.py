@@ -64,3 +64,19 @@ def tree_mean_axis0(a):
 def tree_broadcast_axis0(a, n):
     """Tile every leaf along a new leading replica axis of size n."""
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)
+
+
+def tree_unzip(like, packed, n: int):
+    """Split a tree-of-tuples into a tuple of trees.
+
+    ``packed`` is the result of a ``jax.tree.map`` whose function returns
+    an n-tuple per leaf (so each "leaf" of ``packed``, relative to the
+    structure of ``like``, is an n-tuple).  Returns n trees, each shaped
+    like ``like``:
+
+        out = jax.tree.map(lambda p, v: (p + 1, v * 2), params, vel)
+        params2, vel2 = tree_unzip(params, out, 2)
+    """
+    treedef = jax.tree.structure(like)
+    groups = treedef.flatten_up_to(packed)
+    return tuple(treedef.unflatten([g[i] for g in groups]) for i in range(n))

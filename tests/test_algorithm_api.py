@@ -1,0 +1,283 @@
+"""The unified Algorithm protocol + registry (core/algorithm.py).
+
+Covers the ISSUE-2 acceptance surface:
+  * registry round-trip: names() <-> the --algo CLI choices, and every
+    registered object satisfies the protocol;
+  * cross-algorithm structural equivalence through the new API
+    (entropy_sgd == parle n=1; elastic_sgd/sgd sharded step == local
+    step on an 8-device host mesh — in a subprocess, same rationale as
+    test_distributed_sync.py);
+  * the per-step vs per-L-steps communication claim from compiled HLO
+    (launch/hlo_stats.py entry-computation scope);
+  * checkpoint restore rejecting a mismatched algo name;
+  * lr step-decay boundaries taking effect through the protocol.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ParleConfig
+from repro.core import parle, registry
+from repro.core.algorithm import Algorithm
+
+
+def quad_loss(params, batch):
+    del batch
+    return 0.5 * jnp.sum((params["w"] - 3.0) ** 2), ()
+
+
+# ------------------------------------------------------------------
+# Registry round-trip
+# ------------------------------------------------------------------
+
+def test_registry_names_match_cli_choices():
+    from repro.launch.train import build_argparser
+    ap = build_argparser()
+    algo_action = next(a for a in ap._actions if a.dest == "algo")
+    assert sorted(algo_action.choices) == registry.names()
+    assert registry.names() == ["elastic_sgd", "entropy_sgd", "parle", "sgd"]
+
+
+def test_registered_objects_satisfy_protocol():
+    for name in registry.names():
+        algo = registry.get(name)
+        assert isinstance(algo, Algorithm), name
+        assert algo.name == name
+        # same instance on repeated lookup (registry, not factory)
+        assert registry.get(name) is algo
+
+
+def test_registry_rejects_unknown_name():
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        registry.get("adamw")
+
+
+def test_canonicalize_entropy_sgd_forces_n1():
+    cfg = ParleConfig(n_replicas=5)
+    c = registry.get("entropy_sgd").canonicalize_cfg(cfg)
+    assert c.n_replicas == 1 and c.mode == "entropy_sgd"
+    assert registry.get("parle").canonicalize_cfg(cfg).n_replicas == 5
+
+
+# ------------------------------------------------------------------
+# Cross-algorithm structural equivalence through the protocol
+# ------------------------------------------------------------------
+
+def test_entropy_sgd_equals_parle_n1_through_protocol():
+    params = {"w": jnp.array([1.0, -2.0, 0.5])}
+    cfg = ParleConfig(n_replicas=1, L=3, lr=0.1, lr_inner=0.1)
+    batch = {"x": jnp.zeros((1, 1))}
+    states = {}
+    for name in ("entropy_sgd", "parle"):
+        algo = registry.get(name)
+        c = algo.canonicalize_cfg(cfg)
+        st = algo.init(params, c)
+        step = algo.make_step(quad_loss, c)
+        for _ in range(7):
+            st, m = step(st, batch)
+        assert "loss" in m, name
+        states[name] = st
+    np.testing.assert_allclose(np.asarray(states["entropy_sgd"].x["w"]),
+                               np.asarray(states["parle"].x["w"]), rtol=1e-7)
+
+
+def test_deployable_matches_legacy_accessors():
+    cfg = ParleConfig(n_replicas=3, L=2, batches_per_epoch=5)
+    params = {"w": jnp.arange(4.0)}
+    batch = {"x": jnp.zeros((3, 1))}
+    for name, legacy in (("parle", parle.average_model),
+                        ("elastic_sgd", lambda s: s.ref)):
+        algo = registry.get(name)
+        st = algo.init(params, algo.canonicalize_cfg(cfg))
+        step = jax.jit(algo.make_step(quad_loss, algo.canonicalize_cfg(cfg)))
+        for i in range(3):
+            st, _ = step(st, batch)
+        np.testing.assert_allclose(np.asarray(algo.deployable(st)["w"]),
+                                   np.asarray(legacy(st)["w"]))
+
+
+def test_diagnostics_shape():
+    cfg = ParleConfig(n_replicas=2, batches_per_epoch=5)
+    for name in registry.names():
+        algo = registry.get(name)
+        c = algo.canonicalize_cfg(cfg)
+        st = algo.init({"w": jnp.ones(4)}, c)
+        d = algo.diagnostics(st)
+        assert isinstance(d, dict)
+        assert all(isinstance(v, float) for v in d.values()), (name, d)
+        if name in ("parle", "elastic_sgd"):        # replica axis exists
+            assert {"overlap", "spread"} <= set(d)
+
+
+# ------------------------------------------------------------------
+# LR step-decay through the protocol (satellite: §4 schedules)
+# ------------------------------------------------------------------
+
+def lin_loss(params, batch):
+    del batch
+    return jnp.sum(params["w"]), ()         # grad == 1 everywhere
+
+
+@pytest.mark.parametrize("name", ["parle", "elastic_sgd", "sgd"])
+def test_lr_drop_boundaries_take_effect(name):
+    """With momentum 0 and a constant unit gradient, the per-step
+    parameter displacement IS the lr — so the drop boundary is visible
+    exactly at lr_drop_steps."""
+    algo = registry.get(name)
+    cfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=1, L=1000, momentum=0.0, gamma0=1e9, rho0=1e9,
+        lr=0.1, lr_inner=0.1, lr_drop_steps=(3,), lr_drop_factor=0.1))
+    st = algo.init({"w": jnp.zeros(4)}, cfg)
+    step = jax.jit(algo.make_step(lin_loss, cfg))
+    batch = {"x": jnp.zeros((1, 1))}
+
+    def main_iterate(s):
+        return np.asarray(algo.deployable(s)["w"]) if name == "sgd" \
+            else np.asarray(s.x["w"] if name == "elastic_sgd" else s.y["w"])
+
+    prev = main_iterate(st).copy()
+    deltas = []
+    for i in range(6):
+        st, _ = step(st, batch)
+        cur = main_iterate(st)
+        deltas.append(float(np.abs(cur - prev).mean()))
+        prev = cur.copy()
+    np.testing.assert_allclose(deltas[:3], [0.1] * 3, rtol=1e-5)
+    np.testing.assert_allclose(deltas[3:], [0.01] * 3, rtol=1e-5)
+
+
+def test_explicit_lr_schedule_overrides_cfg():
+    algo = registry.get("sgd")
+    cfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=1, momentum=0.0, lr=1.0, lr_drop_steps=(1,)))
+    step = jax.jit(algo.make_step(lin_loss, cfg,
+                                  lr_schedule=lambda k: 0.5))
+    st = algo.init({"w": jnp.zeros(2)}, cfg)
+    st, m = step(st, {"x": jnp.zeros((1, 1))})
+    assert float(m["lr"]) == pytest.approx(0.5)
+
+
+# ------------------------------------------------------------------
+# Checkpoint stamping / validation
+# ------------------------------------------------------------------
+
+def test_checkpoint_rejects_mismatched_algo(tmp_path):
+    cfg = ParleConfig(n_replicas=2, batches_per_epoch=5)
+    algo = registry.get("parle")
+    st = algo.init({"w": jnp.ones(4)}, algo.canonicalize_cfg(cfg))
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, st, step=7, algo="parle")
+    assert ckpt.saved_meta(path)["algo"] == "parle"
+    # same algo: round-trips
+    back = ckpt.restore(path, st, algo="parle")
+    np.testing.assert_allclose(np.asarray(back.x["w"]),
+                               np.asarray(st.x["w"]))
+    # different algo: refused
+    with pytest.raises(ValueError, match="written by algo 'parle'"):
+        ckpt.restore(path, st, algo="elastic_sgd")
+    # unstamped caller (legacy) still restores
+    ckpt.restore(path, st)
+
+
+# ------------------------------------------------------------------
+# Sharded equivalence + the per-step HLO communication claim
+# (8-device child interpreter; see test_distributed_sync.py for why)
+# ------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.configs.base import ParleConfig
+    from repro.core import registry
+    from repro.launch.hlo_stats import collective_bytes
+    from repro.launch.mesh import make_mesh_from_spec
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+
+    mesh = make_mesh_from_spec("replica:8")
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6,))}
+    batch = {"t": jax.random.normal(jax.random.PRNGKey(1), (8, 1))}
+
+    # ---- elastic_sgd / sgd: sharded step == local step ------------
+    for name in ("elastic_sgd", "sgd"):
+        algo = registry.get(name)
+        cfg = algo.canonicalize_cfg(ParleConfig(
+            n_replicas=8, L=3, lr=0.1, lr_inner=0.1, batches_per_epoch=5))
+        st_l, st_s = algo.init(params, cfg), algo.init(params, cfg)
+        f_l = jax.jit(algo.make_step(loss, cfg))
+        f_s = algo.make_sharded_step(loss, cfg, mesh)
+        for i in range(5):                  # crosses an L=3 scope decay
+            st_l, m_l = f_l(st_l, batch)
+            st_s, m_s = f_s(st_s, batch)
+        for a, b in zip(jax.tree.leaves(st_l), jax.tree.leaves(st_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(m_l["loss"]), float(m_s["loss"]),
+                                   rtol=1e-6)
+        dep_l, dep_s = algo.deployable(st_l), algo.deployable(st_s)
+        np.testing.assert_allclose(np.asarray(dep_l["w"]),
+                                   np.asarray(dep_s["w"]), rtol=1e-6)
+    print("SHARDED_EQ_OK")
+
+    # ---- per-step vs per-L communication, from compiled HLO -------
+    size = 4096
+    per_step = {}
+    for name in ("parle", "elastic_sgd"):
+        algo = registry.get(name)
+        cfg = algo.canonicalize_cfg(ParleConfig(n_replicas=8, L=25,
+                                                batches_per_epoch=10))
+        st = algo.init({"w": jnp.zeros((size,), jnp.float32)}, cfg)
+        step = algo.make_sharded_step(loss, cfg, mesh)
+        hlo = step.lower(st, {"t": jnp.zeros((8, 1), jnp.float32)}) \\
+                  .compile().as_text()
+        total = collective_bytes(hlo)["bytes"]["all-reduce"]
+        entry = collective_bytes(hlo, scope="entry")["bytes"]["all-reduce"]
+        # both steps carry one model-size all-reduce overall (+ loss pmean)
+        assert size * 4 <= total <= size * 4 + 64, (name, total)
+        per_step[name] = entry
+    # elastic: the model-size all-reduce is UNCONDITIONAL (every step);
+    # parle: only the scalar loss pmean is — Eq. 8d fires once per L
+    assert per_step["elastic_sgd"] >= size * 4, per_step
+    assert per_step["parle"] < size, per_step
+    print("PER_STEP_HLO_OK", per_step)
+""")
+
+
+def _run_child(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+
+
+@pytest.fixture(scope="module")
+def child_run():
+    return _run_child(_CHILD)
+
+
+def test_sharded_baselines_match_local_on_8_device_mesh(child_run):
+    assert child_run.returncode == 0, \
+        f"stdout:\n{child_run.stdout}\nstderr:\n{child_run.stderr}"
+    assert "SHARDED_EQ_OK" in child_run.stdout
+
+
+def test_elastic_all_reduce_is_per_step_parle_per_L(child_run):
+    """ISSUE-2 acceptance: --algo elastic_sgd --mesh replica:N compiles
+    to one model-size all-reduce PER STEP (entry computation), while
+    Parle's one model-size all-reduce sits under the k%L conditional."""
+    assert child_run.returncode == 0, \
+        f"stdout:\n{child_run.stdout}\nstderr:\n{child_run.stderr}"
+    assert "PER_STEP_HLO_OK" in child_run.stdout
