@@ -1,0 +1,127 @@
+"""Seed/refresh ``benchmarks/BENCH_parle.json`` — the tracked perf
+trajectory of the Parle hot path on a PINNED smoke config:
+
+  * ``inner_step_us``  — one Eq. (8a-8b) step (vmap'd replicas, jitted),
+  * ``sync_step_us``   — one Eq. (8c-8d) sync (the per-L step),
+  * ``fused_step_us``  — the production fused step (cond'd sync),
+  * per-axis collective bytes of the composed-mesh compiled step
+    (``replica:2,data:2,model:2`` via a subprocess so the forced
+    8-device host platform never leaks into this process).
+
+  PYTHONPATH=src python benchmarks/bench_parle.py          # write JSON
+  PYTHONPATH=src python -m benchmarks.run parle            # suite line
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_parle.json")
+
+# the pinned smoke config: small enough for CI CPUs, big enough that the
+# update streams dominate python dispatch
+PIN = {"d_model": 128, "num_layers": 2, "d_ff": 256, "vocab": 512,
+       "seq": 32, "batch": 2, "n_replicas": 2, "L": 3,
+       "mesh": "replica:2,data:2,model:2", "param_size": 1 << 20}
+
+
+def _time_us(fn, *args, warmup=2, iters=10):
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def measure_steps() -> dict:
+    import jax
+
+    from repro.configs.base import ModelConfig, ParleConfig
+    from repro.data.synthetic import TokenStream, replica_batches
+    from repro.launch import steps as steps_lib
+
+    mcfg = ModelConfig(name="bench-dense", family="dense",
+                       num_layers=PIN["num_layers"], d_model=PIN["d_model"],
+                       num_heads=4, num_kv_heads=2, d_ff=PIN["d_ff"],
+                       vocab_size=PIN["vocab"], head_dim=32)
+    pcfg = ParleConfig(n_replicas=PIN["n_replicas"], L=PIN["L"],
+                       batches_per_epoch=5)
+    from repro.core import registry
+    from repro.models.model import build_model
+    algo = registry.get("parle")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = algo.init(params, pcfg)
+    stream = TokenStream(vocab_size=mcfg.vocab_size, seq_len=PIN["seq"],
+                         batch_size=PIN["batch"], seed=0)
+    batch = replica_batches(stream, 0, PIN["batch"], PIN["n_replicas"])
+
+    inner, sync, fused = steps_lib.make_parle_steps(mcfg, pcfg)
+    inner_j, sync_j = jax.jit(inner), jax.jit(sync)
+    fused_j = jax.jit(algo.make_step(model.loss, pcfg))
+    return {
+        "inner_step_us": round(_time_us(inner_j, state, batch), 1),
+        "sync_step_us": round(_time_us(sync_j, state), 1),
+        "fused_step_us": round(_time_us(fused_j, state, batch), 1),
+    }
+
+
+def measure_comm() -> dict:
+    """Per-axis collective bytes of the composed-mesh step, via the
+    comm_volume CLI in a subprocess (forced host device count)."""
+    res = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "comm_volume.py"),
+         "--mesh", PIN["mesh"], "--host-devices", "8",
+         "--algo", "parle", "--param-size", str(PIN["param_size"])],
+        capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(res.stdout + res.stderr)
+    row = next(l for l in res.stdout.splitlines()
+               if l.startswith("comm_mesh_parle"))
+    fields = dict(kv.split("=") for kv in row.split(",")[2].split(";"))
+    axes = {m.group(1): int(fields[m.group(0)])
+            for m in (re.match(r"axis_(\w+)_bytes", k)
+                      for k in fields) if m}
+    return {
+        "mesh": PIN["mesh"],
+        "per_axis_comm_bytes": axes,
+        "sync_all_reduce_bytes_per_device": int(
+            fields["all_reduce_bytes_per_device"]),
+        "expected_sync_shard_bytes": int(fields["expected_sync_bytes"]),
+        "per_step_entry_bytes": int(fields["per_step_bytes"]),
+        "amortized_bytes_per_step": float(
+            fields["amortized_bytes_per_step"]),
+    }
+
+
+def main(out_path: str = OUT_PATH):
+    rec = {"pinned_config": PIN}
+    rec.update(measure_steps())
+    rec.update(measure_comm())
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+        f.write("\n")
+    # benchmark-suite CSV contract: name,us_per_call,derived
+    print(f"bench_parle_inner,{rec['inner_step_us']},"
+          f"sync_us={rec['sync_step_us']};fused_us={rec['fused_step_us']};"
+          f"sync_ar_bytes={rec['sync_all_reduce_bytes_per_device']};"
+          f"out={os.path.relpath(out_path)}")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT_PATH)
+    main(ap.parse_args().out)

@@ -55,14 +55,25 @@ def measured_mesh_rows(mesh_spec: str, param_size: int,
     / data-parallel SGD: one model-size all-reduce per step); collectives
     inside the sync conditional fire once every L steps (Parle) — so the
     measured 25x Parle-vs-Elastic gap of §4.1 falls out of
-    ``amortized_bytes_per_step`` directly."""
+    ``amortized_bytes_per_step`` directly.
+
+    On a composed mesh (e.g. ``replica:2,data:2,model:2``) the model is
+    a 2-layer matmul chain and the accounting goes PER AXIS
+    (hlo_stats.collective_bytes_by_axis): the Eq. (8d) sync all-reduce
+    rides the replica axis at shard-size/device (the model-size bytes
+    divided by the in-replica axes), while the FSDP/TP collectives stay
+    on "data"/"model" inside the replica."""
+    import numpy as np
+
     import jax
     import jax.numpy as jnp
 
     from repro.configs.base import ParleConfig
     from repro.core import registry
-    from repro.launch.hlo_stats import collective_bytes
+    from repro.launch.hlo_stats import (collective_bytes,
+                                        collective_bytes_by_axis)
     from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+    from repro.sharding import planner
 
     mesh = make_mesh_from_spec(mesh_spec)
     raxis = replica_axis_of(mesh)
@@ -73,32 +84,57 @@ def measured_mesh_rows(mesh_spec: str, param_size: int,
     cfg = algo.canonicalize_cfg(
         ParleConfig(n_replicas=n, L=L, batches_per_epoch=10))
 
-    def loss(p, b):
-        return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+    inner_axes = planner.in_replica_axes(mesh, raxis)
+    if inner_axes:
+        # matmul chain: a real contraction so FSDP/TP collectives appear
+        d = 64
+        ff = max(param_size // (2 * d), d)
 
-    params = {"w": jnp.zeros((param_size,), jnp.float32)}
+        def loss(p, b):
+            h = b["x"] @ p["w_up"]
+            return 0.5 * jnp.sum((h @ p["w_down"] - b["t"]) ** 2), ()
+
+        params = {"w_up": jnp.zeros((d, ff), jnp.float32),
+                  "w_down": jnp.zeros((ff, d), jnp.float32)}
+        batch = {"x": jnp.zeros((n, 4, d), jnp.float32),
+                 "t": jnp.zeros((n, 4, d), jnp.float32)}
+        nparam = 2 * d * ff
+    else:
+        def loss(p, b):
+            return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+
+        params = {"w": jnp.zeros((param_size,), jnp.float32)}
+        batch = {"t": jnp.zeros((n, 1), jnp.float32)}
+        nparam = param_size
+
     state = algo.init(params, cfg)
-    batch = {"t": jnp.zeros((n, 1), jnp.float32)}
     step = algo.make_sharded_step(loss, cfg, mesh, replica_axis=raxis)
     hlo = step.lower(state, batch).compile().as_text()
     coll = collective_bytes(hlo)
     entry = collective_bytes(hlo, scope="entry")
 
-    expected = param_size * 4            # the model-size (f32) all-reduce
+    inner_div = int(np.prod([mesh.shape[a] for a in inner_axes])) or 1
+    expected = nparam * 4 // inner_div   # the SHARD-size (f32) all-reduce
     ar = coll["bytes"]["all-reduce"]
     per_step = entry["bytes"]["all-reduce"]          # unconditional
     amortized = per_step + (ar - per_step) / L       # + cond'l every L
     # the output contract is 3-field CSV: keep commas out of the name
     tag = mesh_spec.replace(":", "").replace(",", "_")
-    return [
+    row = (
         f"comm_mesh_{algo_name}_{tag},0,"
-        f"devices={n};params={param_size};"
+        f"devices={int(np.prod(list(mesh.shape.values())))};"
+        f"params={nparam};"
         f"all_reduce_bytes_per_device={ar};"
         f"per_step_bytes={per_step};"
         f"expected_sync_bytes={expected};"
         f"collective_counts={sum(coll['counts'].values())};"
-        f"amortized_bytes_per_step={amortized:.1f}"
-    ]
+        f"amortized_bytes_per_step={amortized:.1f}")
+    if inner_axes:
+        by_axis = collective_bytes_by_axis(hlo, dict(mesh.shape))
+        for label in sorted(by_axis["by_axis"]):
+            total = sum(by_axis["by_axis"][label].values())
+            row += f";axis_{label.replace('+', '_')}_bytes={total}"
+    return [row]
 
 
 def main(argv=None):

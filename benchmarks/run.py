@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import (comm_volume, fig1_overlap, kernel_bench, roofline,
-                        table1_baselines, table2_split_data)
+from benchmarks import (bench_parle, comm_volume, fig1_overlap, kernel_bench,
+                        roofline, table1_baselines, table2_split_data)
 
 SUITES = {
     "table1": table1_baselines.main,     # Parle vs baselines (Table 1)
@@ -20,6 +20,7 @@ SUITES = {
     "comm": lambda: comm_volume.main([]),  # §4.1 communication accounting
     "kernels": kernel_bench.main,        # Pallas kernel oracle micro-bench
     "roofline": roofline.main,           # §Roofline aggregation
+    "parle": bench_parle.main,           # BENCH_parle.json perf trajectory
 }
 
 

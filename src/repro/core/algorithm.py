@@ -15,8 +15,17 @@ registered object (see :mod:`repro.core.registry`) exposing
                              -> step(state, batch) -> (state, metrics)
   make_sharded_step(loss_fn, cfg, mesh, replica_axis, *, ...)
                              -> the same step under shard_map, replica
-                                axis sharded over the mesh
-  state_pspecs(replica_axis) -> PartitionSpec prefix tree for State
+                                axis sharded over the mesh; in-replica
+                                "data"/"model" axes run FSDP x TP from
+                                the sharding planner under the SAME
+                                shard_map (replica manual, rest auto)
+  state_pspecs(replica_axis, params=None, mesh=None)
+                             -> PartitionSpec tree for State: the
+                                replica-axis prefix form without
+                                ``params``; with ``params`` the
+                                planner-composed per-leaf form
+                                ``P(replica, *plan(leaf))`` (what
+                                device_put / checkpoint restore use)
   deployable(state)          -> the single servable model pytree
   diagnostics(state)         -> dict of host-side floats (overlap /
                                 spread where a replica axis exists)
@@ -60,7 +69,7 @@ class Algorithm(Protocol):
                           weight_decay: float = 0.0,
                           use_kernel: bool = False, lr_schedule=None): ...
 
-    def state_pspecs(self, replica_axis: str): ...
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None): ...
 
     def deployable(self, state): ...
 
@@ -113,9 +122,9 @@ class ParleAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str):
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
         from repro.sharding.partition import parle_state_pspecs
-        return parle_state_pspecs(replica_axis)
+        return parle_state_pspecs(replica_axis, params=params, mesh=mesh)
 
     def deployable(self, state):
         return parle.average_model(state)
@@ -184,9 +193,9 @@ class ElasticSGDAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str):
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
         from repro.sharding.partition import elastic_state_pspecs
-        return elastic_state_pspecs(replica_axis)
+        return elastic_state_pspecs(replica_axis, params=params, mesh=mesh)
 
     def deployable(self, state):
         return elastic_sgd.average_model(state)
@@ -227,10 +236,10 @@ class SGDAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str):
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
         from repro.sharding.partition import sgd_state_pspecs
         del replica_axis    # one replicated model; nothing rides the axis
-        return sgd_state_pspecs()
+        return sgd_state_pspecs(params=params, mesh=mesh)
 
     def deployable(self, state):
         return state.params

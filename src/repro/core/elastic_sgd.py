@@ -44,12 +44,15 @@ def init(params, cfg) -> ElasticState:
 
 
 def update(state: ElasticState, grads, cfg, axis_name: str | None = None,
-           use_kernel: bool = False, lr_scale=1.0) -> ElasticState:
+           use_kernel: bool = False, lr_scale=1.0,
+           shard_ctx=None) -> ElasticState:
     """One Eq. (7) step.  Local path (axis_name=None): the replica mean
     is the leading-axis mean.  shard_map path: the global n replicas are
     laid out as (devices, n_per_device), so the global mean = pmean over
     the mesh axis of the LOCAL leading-axis mean — one model-size
-    all-reduce, fired EVERY step (the paper's O(2nN) baseline)."""
+    all-reduce, fired EVERY step (the paper's O(2nN) baseline).
+    ``shard_ctx``: planner context when leaves are FSDP x TP sharded
+    over in-replica axes (kernel grids over the local shard)."""
     mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
 
@@ -59,7 +62,7 @@ def update(state: ElasticState, grads, cfg, axis_name: str | None = None,
         from repro.kernels import ops as kops
         x, v = kops.elastic_worker_update(
             state.x, state.v, grads, state.ref,
-            inv_rho=inv_rho, lr=lr, mu=mu)
+            inv_rho=inv_rho, lr=lr, mu=mu, shard_ctx=shard_ctx)
     else:
         def upd(x, v, g, r):
             g_e = g + inv_rho * (x - r[None])
@@ -85,7 +88,7 @@ def update(state: ElasticState, grads, cfg, axis_name: str | None = None,
 
 def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                     use_kernel: bool, axis_name: str | None,
-                    lr_schedule=None):
+                    lr_schedule=None, shard_ctx=None):
     """Shared body of the local and sharded train steps (cf.
     parle._make_step_body)."""
 
@@ -100,7 +103,8 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                                  grads, state.x)
         lr_scale = lr_schedule(state.step) if lr_schedule is not None else 1.0
         new_state = update(state, grads, cfg, axis_name=axis_name,
-                           use_kernel=use_kernel, lr_scale=lr_scale)
+                           use_kernel=use_kernel, lr_scale=lr_scale,
+                           shard_ctx=shard_ctx)
         loss = jnp.mean(losses)
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
@@ -132,17 +136,31 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.sharding import planner
     from repro.sharding.partition import (elastic_state_pspecs,
                                           make_sharded_step_fn)
 
+    shard_ctx = planner.make_shard_context(mesh, replica_axis)
+    constrain = None
+    if shard_ctx is not None:
+        def constrain(state):
+            c = lambda t, lead: planner.constrain_tree(t, mesh, lead=lead)
+            return state._replace(x=c(state.x, 1), v=c(state.v, 1),
+                                  ref=c(state.ref, 0))
+
+    # size-1 replica axis: the local leading-axis mean already is the
+    # global mean (see parle.make_sharded_train_step)
+    axis_name = replica_axis if mesh.shape[replica_axis] > 1 else None
     local_step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
-                                 axis_name=replica_axis,
-                                 lr_schedule=lr_schedule)
+                                 axis_name=axis_name,
+                                 lr_schedule=lr_schedule,
+                                 shard_ctx=shard_ctx)
     metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
                     "rho": P(), "step": P()}
     return make_sharded_step_fn(local_step, mesh, replica_axis,
                                 elastic_state_pspecs(replica_axis),
-                                metric_specs, cfg.n_replicas)
+                                metric_specs, cfg.n_replicas,
+                                constrain=constrain)
 
 
 def average_model(state: ElasticState):

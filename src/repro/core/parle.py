@@ -82,9 +82,12 @@ def init_from_replicas(replica_params, cfg) -> ParleState:
 # ------------------------------------------------------------------
 
 def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
-               lr_scale=1.0) -> ParleState:
+               lr_scale=1.0, shard_ctx=None) -> ParleState:
     """grads: pytree with leading replica axis = grad f(y^a) per replica.
-    ``lr_scale``: multiplier on lr_inner (step-decay schedules, §4)."""
+    ``lr_scale``: multiplier on lr_inner (step-decay schedules, §4).
+    ``shard_ctx``: planner context when the leaves are FSDP x TP sharded
+    over in-replica mesh axes — the kernels then grid over the LOCAL
+    shard of each leaf (see kernels/parle_update.py)."""
     mu, lr = cfg.momentum, cfg.lr_inner * lr_scale
     inv_gamma = 1.0 / state.scopes.gamma
     alpha = cfg.alpha
@@ -93,7 +96,8 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
         from repro.kernels import ops as kops
         y, z, v_y = kops.parle_inner_update(
             state.y, state.z, state.v_y, grads, state.x,
-            inv_gamma=inv_gamma, lr=lr, mu=mu, alpha=alpha)
+            inv_gamma=inv_gamma, lr=lr, mu=mu, alpha=alpha,
+            shard_ctx=shard_ctx)
     else:
         def upd(y, z, v, g, x):
             g_y = g + inv_gamma * (y - x)          # (8a) proximal gradient
@@ -113,7 +117,8 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
 # ------------------------------------------------------------------
 
 def sync_step(state: ParleState, cfg, axis_name: str | None = None,
-              use_kernel: bool = False, lr_scale=1.0) -> ParleState:
+              use_kernel: bool = False, lr_scale=1.0,
+              shard_ctx=None) -> ParleState:
     mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
 
@@ -137,7 +142,8 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
         from repro.kernels import ops as kops
         x, v_x = kops.parle_sync_update(
             state.x, state.z, state.v_x, xbar,
-            gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu)
+            gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu,
+            shard_ctx=shard_ctx)
     else:
         xbar = jax.tree.map(lambda m, x: jnp.broadcast_to(m[None], x.shape),
                             xbar, state.x)
@@ -161,15 +167,17 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
 
 
 def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
-               axis_name: str | None = None, lr_scale=1.0) -> ParleState:
+               axis_name: str | None = None, lr_scale=1.0,
+               shard_ctx=None) -> ParleState:
     """One Parle step: inner update + conditional sync (k/L integer)."""
     state = inner_step(state, grads, cfg, use_kernel=use_kernel,
-                       lr_scale=lr_scale)
+                       lr_scale=lr_scale, shard_ctx=shard_ctx)
     do_sync = (state.step % cfg.L) == 0
     return jax.lax.cond(do_sync,
                         lambda s: sync_step(s, cfg, axis_name=axis_name,
                                             use_kernel=use_kernel,
-                                            lr_scale=lr_scale),
+                                            lr_scale=lr_scale,
+                                            shard_ctx=shard_ctx),
                         lambda s: s,
                         state)
 
@@ -180,7 +188,7 @@ def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
 
 def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                     use_kernel: bool, axis_name: str | None,
-                    lr_schedule=None):
+                    lr_schedule=None, shard_ctx=None):
     """Shared step body of the local and sharded train steps: per-replica
     grads (vmap over the leading axis) -> fused_step -> metrics.  With
     ``axis_name`` set, the leading axis holds only the LOCAL replicas and
@@ -199,7 +207,8 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                                  grads, state.y)
         lr_scale = lr_schedule(state.step) if lr_schedule is not None else 1.0
         new_state = fused_step(state, grads, cfg, use_kernel=use_kernel,
-                               axis_name=axis_name, lr_scale=lr_scale)
+                               axis_name=axis_name, lr_scale=lr_scale,
+                               shard_ctx=shard_ctx)
         loss = jnp.mean(losses)
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
@@ -245,21 +254,43 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
     State and batch arrive as GLOBAL arrays (leading axis n); outputs
     keep the same layout, so checkpointing / ``average_model`` work
     unchanged.
+
+    Mesh axes beyond ``replica_axis`` ("data"/"model") ride INSIDE each
+    replica: the shard_map leaves them auto, and the sharding planner's
+    constraints (FSDP over "data", TP over "model", per leaf) pin every
+    state leaf to its shard — so the Eq. (8d) all-reduce carries only
+    shard-size bytes per device, while weight all-gathers / partial-sum
+    reductions stay intra-replica.
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.sharding import planner
     from repro.sharding.partition import (make_sharded_step_fn,
                                           parle_state_pspecs)
 
-    # per-device shard: n_local = n / n_dev replicas on the leading axis
+    shard_ctx = planner.make_shard_context(mesh, replica_axis)
+    constrain = None
+    if shard_ctx is not None:
+        def constrain(state):
+            c = lambda t: planner.constrain_tree(t, mesh, lead=1)
+            return state._replace(x=c(state.x), y=c(state.y), z=c(state.z),
+                                  v_y=c(state.v_y), v_x=c(state.v_x))
+
+    # per-device shard: n_local = n / n_dev replicas on the leading axis.
+    # A size-1 replica axis (entropy_sgd under FSDP x TP) carries ALL
+    # replicas locally: the leading-axis mean already is the global mean,
+    # and XLA rejects a cross-partition pmean over a trivial manual axis.
+    axis_name = replica_axis if mesh.shape[replica_axis] > 1 else None
     local_step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
-                                 axis_name=replica_axis,
-                                 lr_schedule=lr_schedule)
+                                 axis_name=axis_name,
+                                 lr_schedule=lr_schedule,
+                                 shard_ctx=shard_ctx)
     metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
                     "gamma": P(), "rho": P(), "step": P()}
     return make_sharded_step_fn(local_step, mesh, replica_axis,
                                 parle_state_pspecs(replica_axis),
-                                metric_specs, cfg.n_replicas)
+                                metric_specs, cfg.n_replicas,
+                                constrain=constrain)
 
 
 def average_model(state: ParleState):

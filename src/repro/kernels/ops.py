@@ -39,18 +39,28 @@ def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int = 128, h0=None):
                          interpret=_interpret())
 
 
-def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha):
+def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
+                       shard_ctx=None):
+    """``shard_ctx`` (repro.sharding.planner.ShardContext): present when
+    the leaves are FSDP x TP sharded over in-replica mesh axes — each
+    leaf's kernel then runs under a nested shard_map so the block grid
+    covers the LOCAL shard only."""
     return _pu.parle_update_tree(y, z, v, g, x, inv_gamma=inv_gamma,
                                  lr=lr, mu=mu, alpha=alpha,
-                                 interpret=_interpret())
+                                 interpret=_interpret(),
+                                 shard_ctx=shard_ctx)
 
 
-def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu):
+def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
+                      shard_ctx=None):
     return _pu.parle_sync_tree(x, z, v, xbar, gamma_scale=gamma_scale,
                                inv_rho=inv_rho, lr=lr, mu=mu,
-                               interpret=_interpret())
+                               interpret=_interpret(),
+                               shard_ctx=shard_ctx)
 
 
-def elastic_worker_update(x, v, g, ref, *, inv_rho, lr, mu):
+def elastic_worker_update(x, v, g, ref, *, inv_rho, lr, mu,
+                          shard_ctx=None):
     return _pu.elastic_update_tree(x, v, g, ref, inv_rho=inv_rho,
-                                   lr=lr, mu=mu, interpret=_interpret())
+                                   lr=lr, mu=mu, interpret=_interpret(),
+                                   shard_ctx=shard_ctx)

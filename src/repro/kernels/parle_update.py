@@ -75,32 +75,73 @@ def _pack_scalars(*vals):
     return jnp.stack([jnp.asarray(s, jnp.float32) for s in vals])
 
 
-def _leafwise(flat_fn, trees, scalars, num_out, interpret):
-    """Apply a flat fused kernel leafwise over pytrees (padding each leaf
-    up to the block size; padding lanes are discarded)."""
-    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
-    leaves = [leaves0] + [treedef.flatten_up_to(t) for t in trees[1:]]
+def _local_shard_wrap(call, shard_ctx, path, rep_shapes, shared_shape,
+                      num_out):
+    """Wrap a per-leaf kernel call in a nested shard_map over the
+    in-replica mesh axes (planner :class:`ShardContext`), so the kernel's
+    block grid covers only the LOCAL shard of the leaf.
+
+    Inside the algorithm's outer shard_map the replica axis is already
+    manual and the "data"/"model" axes are auto: this nested shard_map
+    makes them manual too for exactly the (elementwise) update, handing
+    the kernel local blocks.  ``rep_shapes`` leaves carry a leading
+    (local-)replica dim that stays unsharded; the optional
+    ``shared_shape`` operand (xbar / elastic ref) has no replica dim.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.planner import path_names
+    from repro.utils.compat import shard_map
+
+    spec = shard_ctx.leaf_spec(path_names(path), rep_shapes[0][1:])
+    rep_spec = P(None, *spec)
+    in_specs = (rep_spec,) * len(rep_shapes)
+    if shared_shape is not None:
+        in_specs = in_specs + (spec,)
+    return shard_map(call, shard_ctx.mesh, in_specs=in_specs,
+                     out_specs=(rep_spec,) * num_out)
+
+
+def _leaf_call(flat_fn, leaf_group, scalars, interpret):
+    """Pad/flatten ONE group of same-shaped leaves, run the flat fused
+    kernel, cut the padding (padding lanes are discarded)."""
+    ref = leaf_group[0]
+    shape, size = ref.shape, ref.size
+    pad = (-size) % BLOCK_ELEMS
+    fl = lambda a: jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
+    res = flat_fn(*[fl(l) for l in leaf_group], scalars,
+                  interpret=interpret)
+    cut = lambda a: a[:size].reshape(shape).astype(ref.dtype)
+    return tuple(cut(r) for r in res)
+
+
+def _leafwise(flat_fn, trees, scalars, num_out, interpret, shard_ctx=None):
+    """Apply a flat fused kernel leafwise over pytrees.  With a planner
+    ``shard_ctx`` each leaf's call runs under a nested shard_map over the
+    in-replica axes (block grid over the local shard)."""
+    flat0, treedef = jax.tree_util.tree_flatten_with_path(trees[0])
+    leaves = [[l for _, l in flat0]] \
+        + [treedef.flatten_up_to(t) for t in trees[1:]]
     outs = [[] for _ in range(num_out)]
-    for leaf_group in zip(*leaves):
-        ref = leaf_group[0]
-        shape, size = ref.shape, ref.size
-        pad = (-size) % BLOCK_ELEMS
-        fl = lambda a: jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
-        res = flat_fn(*[fl(l) for l in leaf_group], scalars,
-                      interpret=interpret)
-        cut = lambda a: a[:size].reshape(shape).astype(ref.dtype)
+    for (path, _), *leaf_group in zip(flat0, *leaves):
+        call = lambda *g: _leaf_call(flat_fn, g, scalars, interpret)
+        if shard_ctx is not None:
+            call = _local_shard_wrap(
+                call, shard_ctx, path,
+                [l.shape for l in leaf_group], None, num_out)
+        res = call(*leaf_group)
         for acc, r in zip(outs, res):
-            acc.append(cut(r))
+            acc.append(r)
     un = jax.tree_util.tree_unflatten
     return tuple(un(treedef, o) for o in outs)
 
 
 def parle_update_tree(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
-                      interpret: bool = True):
+                      interpret: bool = True, shard_ctx=None):
     """Fused inner update (8a-8b) leafwise over pytrees."""
     scalars = _pack_scalars(inv_gamma, lr, mu, alpha)
     return _leafwise(parle_update_flat, (y, z, v, g, x), scalars,
-                     num_out=3, interpret=interpret)
+                     num_out=3, interpret=interpret, shard_ctx=shard_ctx)
 
 
 # ------------------------------------------------------------------
@@ -151,35 +192,52 @@ def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True):
     return x2.reshape(r, m), v2.reshape(r, m)
 
 
+def _shared_leaf_call(flat_fn, reps, shared, scalars, interpret):
+    """Pad/flatten ONE leaf group of (R, ...) streams + a shared (...)
+    stream, run the flat kernel, cut the padding."""
+    lead = reps[0]
+    r = lead.shape[0]
+    size = shared.size
+    assert lead.size == r * size, (lead.shape, shared.shape)
+    pad = (-size) % BLOCK_ELEMS
+    fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
+                              ((0, 0), (0, pad)))
+    na, nb = flat_fn(*[fl(l, r) for l in reps], fl(shared, 1)[0],
+                     scalars, interpret=interpret)
+    cut = lambda a: a[:, :size].reshape(lead.shape).astype(lead.dtype)
+    return cut(na), cut(nb)
+
+
 def _replicated_shared_tree(flat_fn, rep_trees, shared_tree, scalars,
-                            interpret):
+                            interpret, shard_ctx=None):
     """Shared leafwise driver for the two (R, M)-streams + one shared
-    M-stream kernels (sync: xbar; elastic: ref): pad each leaf up to the
-    block size, run the flat kernel, cut the padding."""
-    leaves0, treedef = jax.tree_util.tree_flatten(rep_trees[0])
-    rep_leaves = [leaves0] + [treedef.flatten_up_to(t) for t in rep_trees[1:]]
+    M-stream kernels (sync: xbar; elastic: ref).  With a planner
+    ``shard_ctx`` each leaf runs under a nested shard_map over the
+    in-replica axes: the kernel grids over the LOCAL shard and the
+    shared stream stays at local-shard size too (sharded exactly like
+    the replica streams' trailing dims)."""
+    flat0, treedef = jax.tree_util.tree_flatten_with_path(rep_trees[0])
+    rep_leaves = [[l for _, l in flat0]] \
+        + [treedef.flatten_up_to(t) for t in rep_trees[1:]]
     shared_leaves = treedef.flatten_up_to(shared_tree)
     out_a, out_b = [], []
-    for group in zip(*rep_leaves, shared_leaves):
+    for (path, _), *group in zip(flat0, *rep_leaves, shared_leaves):
         *reps, shared = group
-        lead = reps[0]
-        r = lead.shape[0]
-        size = shared.size
-        assert lead.size == r * size, (lead.shape, shared.shape)
-        pad = (-size) % BLOCK_ELEMS
-        fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
-                                  ((0, 0), (0, pad)))
-        na, nb = flat_fn(*[fl(l, r) for l in reps], fl(shared, 1)[0],
-                         scalars, interpret=interpret)
-        cut = lambda a: a[:, :size].reshape(lead.shape).astype(lead.dtype)
-        out_a.append(cut(na))
-        out_b.append(cut(nb))
+        call = lambda *rs: _shared_leaf_call(flat_fn, rs[:-1], rs[-1],
+                                             scalars, interpret)
+        if shard_ctx is not None:
+            call = _local_shard_wrap(
+                call, shard_ctx, path, [l.shape for l in reps],
+                shared.shape, num_out=2)
+        na, nb = call(*reps, shared)
+        out_a.append(na)
+        out_b.append(nb)
     un = jax.tree_util.tree_unflatten
     return un(treedef, out_a), un(treedef, out_b)
 
 
 def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
-                    interpret: bool = True):
+                    interpret: bool = True, shard_ctx=None):
     """Fused sync update (8c-8d) leafwise over pytrees.
 
     x, z, v leaves carry the leading replica axis (R, ...); xbar leaves
@@ -188,7 +246,7 @@ def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
     """
     scalars = _pack_scalars(gamma_scale, inv_rho, lr, mu)
     return _replicated_shared_tree(parle_sync_flat, (x, z, v), xbar,
-                                   scalars, interpret)
+                                   scalars, interpret, shard_ctx=shard_ctx)
 
 
 # ------------------------------------------------------------------
@@ -241,7 +299,7 @@ def elastic_update_flat(x, v, g, ref, scalars, interpret: bool = True):
 
 
 def elastic_update_tree(x, v, g, ref, *, inv_rho, lr, mu,
-                        interpret: bool = True):
+                        interpret: bool = True, shard_ctx=None):
     """Fused Elastic-SGD worker update (7a) leafwise over pytrees.
 
     x, v, g leaves carry the leading replica axis (R, ...); ref leaves
@@ -249,4 +307,4 @@ def elastic_update_tree(x, v, g, ref, *, inv_rho, lr, mu,
     """
     scalars = _pack_scalars(inv_rho, lr, mu)
     return _replicated_shared_tree(elastic_update_flat, (x, v, g), ref,
-                                   scalars, interpret)
+                                   scalars, interpret, shard_ctx=shard_ctx)

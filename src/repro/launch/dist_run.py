@@ -1,0 +1,254 @@
+"""Multi-process pod-axis launcher: run the ``pod`` mesh layout of
+launch/mesh.py across N REAL processes on one machine, and assert that
+the global-mesh sync is equivalent to the single-process run.
+
+    PYTHONPATH=src python -m repro.launch.dist_run --nproc 2 \\
+        --mesh pod:2 --algo parle --smoke --steps 12 --L 3
+
+The parent spawns N worker processes; each calls
+``jax.distributed.initialize`` (CPU collectives via gloo) so the pod
+axis spans real process boundaries — the same coordination path a
+multi-host TPU slice uses, minus the ICI.  Workers build the SAME
+compiled program as a single-process run of the same mesh spec (same
+global mesh shape, same shard_map, same per-device shard layout), so
+the cross-process gloo all-reduce is the only moving part — and the
+parent then runs the single-process reference and compares the loss
+streams BIT-FOR-BIT (float hex, not allclose).
+
+Composed specs work too: ``--mesh pod:2,data:2`` runs 2 processes x 2
+devices with planner-driven FSDP inside each pod-replica.
+
+All jax imports are deferred: XLA_FLAGS (per-process device count) and
+the distributed runtime must be configured before jax initializes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+LOSS_TAG = "DISTLOSS "
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nproc", type=int, default=2,
+                    help="number of processes to span the mesh across")
+    ap.add_argument("--mesh", default="",
+                    help="mesh spec (default 'pod:<nproc>'); the first "
+                         "axis must be divisible by --nproc")
+    ap.add_argument("--algo", default="parle")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="0 = the mesh replica-axis size")
+    ap.add_argument("--L", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=2, help="per-replica batch")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--port", type=int, default=9876,
+                    help="coordinator port for jax.distributed")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the single-process reference run")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="relative loss tolerance for the comparison; "
+                         "0 (default) = bit-for-bit.  Pure replica/pod "
+                         "meshes are bit-exact; composed specs (e.g. "
+                         "pod:2,data:2) compile per-topology GSPMD "
+                         "programs that differ by a few ulps")
+    ap.add_argument("--_worker", type=int, default=-1,
+                    help="(internal) worker index; set by the parent")
+    return ap
+
+
+def _mesh_spec(args) -> str:
+    return args.mesh or f"pod:{args.nproc}"
+
+
+def _mesh_size(spec: str) -> int:
+    from functools import reduce
+    sizes = [int(p.partition(":")[2]) for p in spec.split(",") if p.strip()]
+    return reduce(lambda a, b: a * b, sizes, 1)
+
+
+def _make_global(x, sharding):
+    """Assemble a global jax.Array from a host value every process holds
+    in full (deterministic streams / replicated init): each process
+    device_puts exactly its addressable shards."""
+    import jax
+    import numpy as np
+    x = np.asarray(x)
+    idx_map = sharding.addressable_devices_indices_map(x.shape)
+    arrs = [jax.device_put(x[idx], d) for d, idx in idx_map.items()]
+    return jax.make_array_from_single_device_arrays(x.shape, sharding, arrs)
+
+
+def run_worker(args) -> list:
+    """One process of the pod: initialize the distributed runtime (when
+    nproc > 1), build the global mesh, run the sharded step stream, and
+    emit bit-exact losses (proc 0 only)."""
+    need = _mesh_size(_mesh_spec(args))
+    if need % args.nproc != 0:
+        raise SystemExit(f"mesh {_mesh_spec(args)!r} ({need} devices) not "
+                         f"divisible by --nproc {args.nproc}")
+    per_proc = need // args.nproc
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={per_proc}")
+
+    import jax
+    if args.nproc > 1:
+        # gloo is the CPU cross-process collective backend; must be
+        # configured before the backend initializes
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(
+            coordinator_address=f"127.0.0.1:{args.port}",
+            num_processes=args.nproc, process_id=args._worker)
+    proc = jax.process_index()
+
+    from repro.configs import ParleConfig, get_config, smoke_variant
+    from repro.core import registry
+    from repro.data.synthetic import TokenStream, replica_batches
+    from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+    from repro.models.model import build_model
+    from repro.sharding import partition
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    model = build_model(cfg)
+    algo = registry.get(args.algo)
+
+    mesh = make_mesh_from_spec(_mesh_spec(args))
+    raxis = replica_axis_of(mesh)
+    if raxis is None:
+        raise SystemExit(f"--mesh {_mesh_spec(args)!r} has no replica axis")
+    n = args.replicas or mesh.shape[raxis]
+    pcfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=n, L=args.L, lr=args.lr, lr_inner=args.lr,
+        batches_per_epoch=max(args.steps // 4, 1)))
+    n = pcfg.n_replicas
+
+    # init ON the global mesh (out_shardings = the planner state specs):
+    # every process traces the same closure, each device materializes
+    # exactly its shard — no host-side global state is ever gathered
+    key = jax.random.PRNGKey(args.seed)
+    params_sds = jax.eval_shape(model.init, key)
+    specs = algo.state_pspecs(raxis, params=params_sds, mesh=mesh)
+    state_sh = partition.shardings(mesh, specs)
+    state = jax.jit(lambda: algo.init(model.init(key), pcfg),
+                    out_shardings=state_sh)()
+
+    step_fn = algo.make_sharded_step(model.loss, pcfg, mesh,
+                                     replica_axis=raxis)
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         batch_size=args.batch, seed=args.seed)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bshard = NamedSharding(mesh, P(raxis))
+
+    if proc == 0:
+        print(json.dumps({
+            "mesh": dict(mesh.shape), "replica_axis": raxis,
+            "processes": jax.process_count(),
+            "devices_per_process": per_proc,
+            "global_devices": jax.device_count()}), flush=True)
+
+    records = []
+    for i in range(args.steps):
+        host_batch = replica_batches(stream, i, args.batch, n)
+        batch = jax.tree.map(lambda b: _make_global(b, bshard), host_batch)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])        # out_specs P() => replicated
+        rec = {"step": i + 1, "loss_hex": loss.hex(),
+               "loss": round(loss, 6)}
+        records.append(rec)
+        if proc == 0:
+            print(LOSS_TAG + json.dumps(rec), flush=True)
+    return records
+
+
+def _spawn(args, worker_args, env_extra):
+    env = dict(os.environ, **env_extra)
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.dist_run"] + worker_args,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+
+
+def _losses(output: str) -> list:
+    return [json.loads(line[len(LOSS_TAG):])
+            for line in output.splitlines() if line.startswith(LOSS_TAG)]
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    if args._worker >= 0:
+        run_worker(args)
+        return 0
+
+    spec = _mesh_spec(args)
+    base = ["--mesh", spec, "--algo", args.algo, "--arch", args.arch,
+            "--replicas", str(args.replicas), "--L", str(args.L),
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--lr", str(args.lr),
+            "--seed", str(args.seed), "--port", str(args.port)]
+    if args.smoke:
+        base.append("--smoke")
+
+    print(json.dumps({"launch": "dist_run", "nproc": args.nproc,
+                      "mesh": spec}), flush=True)
+    procs = [_spawn(args, base + ["--nproc", str(args.nproc),
+                                  "--_worker", str(i)], {})
+             for i in range(args.nproc)]
+    # drain all pipes concurrently: a failed worker can fill its pipe
+    # (long traceback) while its peers block in a gloo collective — a
+    # serial read would deadlock the launcher instead of reporting it
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=args.nproc) as pool:
+        outs = list(pool.map(lambda p: p.communicate()[0], procs))
+    for i, (p, out) in enumerate(zip(procs, outs)):
+        if p.returncode != 0:
+            sys.stderr.write(f"--- worker {i} failed ---\n{out}\n")
+            return p.returncode
+    sys.stdout.write(outs[0])
+    dist = _losses(outs[0])
+    if not dist:
+        sys.stderr.write("worker 0 produced no loss records\n" + outs[0])
+        return 1
+    if args.no_compare:
+        return 0
+
+    # single-process reference: SAME mesh spec, all devices in one
+    # process — the compiled program is identical, only the process
+    # boundary (and its gloo collectives) disappears
+    ref_proc = _spawn(args, base + ["--nproc", "1", "--_worker", "0"], {})
+    ref_out = ref_proc.communicate()[0]
+    if ref_proc.returncode != 0:
+        sys.stderr.write(f"--- reference run failed ---\n{ref_out}\n")
+        return ref_proc.returncode
+    ref = _losses(ref_out)
+
+    mismatches = [
+        {"step": d["step"], "dist": d["loss_hex"], "single": r["loss_hex"]}
+        for d, r in zip(dist, ref) if d["loss_hex"] != r["loss_hex"]]
+    rel = [abs(float.fromhex(d["loss_hex"]) - float.fromhex(r["loss_hex"]))
+           / max(abs(float.fromhex(r["loss_hex"])), 1e-12)
+           for d, r in zip(dist, ref)]
+    verdict = {
+        "compared_steps": min(len(dist), len(ref)),
+        "bitwise_equal": not mismatches and len(dist) == len(ref),
+        "max_rel_diff": max(rel) if rel else None,
+        "mismatches": mismatches[:5],
+    }
+    print(json.dumps(verdict), flush=True)
+    ok = verdict["bitwise_equal"] or (
+        args.tol > 0 and len(dist) == len(ref)
+        and verdict["max_rel_diff"] <= args.tol)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

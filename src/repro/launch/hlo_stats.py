@@ -56,22 +56,11 @@ def entry_computation(hlo_text: str) -> str:
     return "\n".join(out)
 
 
-def collective_bytes(hlo_text: str, scope: str = "all") -> dict:
-    """Sum operand bytes of every collective op in the optimized HLO.
-
-    Post-optimization HLO operands are bare ids (no inline shapes), so a
-    def-map id -> bytes is built first from every instruction's result
-    type annotation.  ``*-done`` halves of async pairs are skipped (the
-    ``*-start`` already carries the transfer).
-
-    ``scope="entry"`` restricts the accounting to the ENTRY computation
-    — the collectives that fire on every step (see
-    :func:`entry_computation`).
-    """
-    if scope == "entry":
-        hlo_text = entry_computation(hlo_text)
-    elif scope != "all":
-        raise ValueError(f"scope must be 'all' or 'entry', got {scope!r}")
+def _scan_collectives(hlo_text: str):
+    """Shared scanning pass: build the id -> result-bytes def map and
+    collect every collective instruction's rhs.  Post-optimization HLO
+    operands are bare ids (no inline shapes), so the def map is built
+    first from every instruction's result type annotation."""
     defs: dict = {}
     coll_lines = []
     for line in hlo_text.splitlines():
@@ -89,21 +78,141 @@ def collective_bytes(hlo_text: str, scope: str = "all") -> dict:
             if re.search(rf"\b{op}(-start)?\(", rhs):
                 coll_lines.append((op, rhs))
                 break
+    return defs, coll_lines
 
+
+def _operand_bytes(op: str, rhs: str, defs: dict) -> int:
+    call = re.search(rf"\b{op}(?:-start)?\((.*)$", rhs).group(1)
+    depth, j = 1, 0
+    while j < len(call) and depth:
+        if call[j] == "(":
+            depth += 1
+        elif call[j] == ")":
+            depth -= 1
+        j += 1
+    operand_str = call[: j - 1] if j else call
+    return sum(defs.get(name, 0) for name in _OPERAND_RE.findall(operand_str))
+
+
+def _scoped(hlo_text: str, scope: str) -> str:
+    if scope == "entry":
+        return entry_computation(hlo_text)
+    if scope != "all":
+        raise ValueError(f"scope must be 'all' or 'entry', got {scope!r}")
+    return hlo_text
+
+
+def collective_bytes(hlo_text: str, scope: str = "all") -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO.
+
+    ``*-done`` halves of async pairs are skipped (the ``*-start``
+    already carries the transfer).
+
+    ``scope="entry"`` restricts the accounting to the ENTRY computation
+    — the collectives that fire on every step (see
+    :func:`entry_computation`).
+    """
+    defs, coll_lines = _scan_collectives(_scoped(hlo_text, scope))
     out = {k: 0 for k in COLLECTIVE_OPS}
     counts = {k: 0 for k in COLLECTIVE_OPS}
     for op, rhs in coll_lines:
-        call = re.search(rf"\b{op}(?:-start)?\((.*)$", rhs).group(1)
-        depth, j = 1, 0
-        while j < len(call) and depth:
-            if call[j] == "(":
-                depth += 1
-            elif call[j] == ")":
-                depth -= 1
-            j += 1
-        operand_str = call[: j - 1] if j else call
-        b = sum(defs.get(name, 0) for name in _OPERAND_RE.findall(operand_str))
-        out[op] += b
+        out[op] += _operand_bytes(op, rhs, defs)
         counts[op] += 1
     return {"bytes": out, "counts": counts,
             "total_bytes": sum(out.values())}
+
+
+# ------------------------------------------------------------------
+# Per-axis accounting: which MESH AXIS does each collective ride?
+# ------------------------------------------------------------------
+
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{(?:\{[0-9,\s]*\},?)*\}"
+    r"|\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+
+
+def parse_replica_groups(rhs: str):
+    """Replica groups of one collective instruction, as a list of device
+    lists.  Handles both the explicit ``{{0,4},{1,5}}`` form and the
+    iota ``[2,4]<=[8]`` / ``[4,2]<=[2,2,2]T(1,0,2)`` form.  Returns None
+    when the instruction carries no replica_groups attribute, [] for the
+    empty (= all devices) group list."""
+    import numpy as np
+    m = _GROUPS_RE.search(rhs)
+    if not m:
+        return None
+    text = m.group(1)
+    if text.startswith("{"):
+        inner = text[1:-1].strip()
+        if not inner:
+            return []
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([0-9,\s]*)\}", text)]
+    shape_m = re.match(r"\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+                       text)
+    out_shape = [int(x) for x in shape_m.group(1).split(",")]
+    src_shape = [int(x) for x in shape_m.group(2).split(",")]
+    ids = np.arange(int(np.prod(src_shape))).reshape(src_shape)
+    if shape_m.group(3):
+        ids = ids.transpose([int(x) for x in shape_m.group(3).split(",")])
+    return [list(row) for row in ids.reshape(out_shape)]
+
+
+def classify_groups(groups, axis_sizes: dict) -> str:
+    """Name the mesh axis (or axis combination) a collective's replica
+    groups ride, given the mesh's ordered ``axis_sizes`` (devices laid
+    out row-major, the jax.make_mesh convention).
+
+    Returns an axis name ("replica"), a "+"-joined combination
+    ("data+model"), "none" (single-device groups: no traffic), or
+    "other" (groups matching no axis partition of this mesh)."""
+    import itertools
+
+    import numpy as np
+    names = list(axis_sizes)
+    sizes = [axis_sizes[n] for n in names]
+    n_dev = int(np.prod(sizes))
+    if groups is None or groups == []:
+        groups = [list(range(n_dev))]
+    observed = frozenset(frozenset(g) for g in groups)
+    if all(len(g) <= 1 for g in observed):
+        return "none"
+    grid = np.arange(n_dev).reshape(sizes)
+    big = [n for n in names if axis_sizes[n] > 1]
+    for k in range(1, len(big) + 1):
+        for subset in itertools.combinations(big, k):
+            keep = [i for i, n in enumerate(names) if n not in subset]
+            move = [i for i, n in enumerate(names) if n in subset]
+            part = grid.transpose(keep + move).reshape(
+                -1, int(np.prod([sizes[i] for i in move])))
+            if frozenset(frozenset(row.tolist()) for row in part) == observed:
+                return "+".join(subset)
+    return "other"
+
+
+def collective_bytes_by_axis(hlo_text: str, axis_sizes: dict,
+                             scope: str = "all") -> dict:
+    """Per-mesh-axis collective accounting of an optimized HLO module.
+
+    Returns ``{"by_axis": {label: {op: bytes}}, "counts_by_axis":
+    {label: int}, "total_bytes": int}`` where label is an axis name from
+    ``axis_sizes`` (or "+"-joined combination / "none" / "other").
+
+    This is what separates the paper's claims on a composed mesh: the
+    Eq. (8d) sync all-reduce rides the replica axis at shard-size bytes
+    per device, while FSDP weight all-gathers and TP partial-sum
+    reductions ride "data"/"model" — INSIDE the replica.
+    """
+    defs, coll_lines = _scan_collectives(_scoped(hlo_text, scope))
+    by_axis: dict = {}
+    counts: dict = {}
+    total = 0
+    for op, rhs in coll_lines:
+        b = _operand_bytes(op, rhs, defs)
+        label = classify_groups(parse_replica_groups(rhs), axis_sizes)
+        by_axis.setdefault(label, {k: 0 for k in COLLECTIVE_OPS})
+        by_axis[label][op] += b
+        counts[label] = counts.get(label, 0) + 1
+        total += b
+    return {"by_axis": by_axis, "counts_by_axis": counts,
+            "total_bytes": total}

@@ -3,6 +3,13 @@ decode.  Exercises the same prefill/decode programs the dry-run lowers.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \\
         --batch 4 --prompt-len 32 --gen 16
+
+What gets served is the registry surface, not raw ``model.init``
+params: ``--algo`` resolves an :class:`~repro.core.algorithm.Algorithm`,
+the state comes from ``algo.init`` (or ``--resume`` a training
+checkpoint — algo-stamp validated), and the served weights are
+``algo.deployable(state)`` — for Parle, the replica average the paper
+evaluates (§1.2), i.e. exactly what the trainer would ship.
 """
 from __future__ import annotations
 
@@ -13,7 +20,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_variant
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import ParleConfig, get_config, smoke_variant
+from repro.core import registry
 from repro.data.synthetic import TokenStream
 from repro.launch.steps import make_decode_step
 from repro.models.model import build_model
@@ -23,6 +32,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--algo", default="parle", choices=registry.names())
+    ap.add_argument("--replicas", type=int, default=3,
+                    help="replica count of the (fresh or restored) state")
+    ap.add_argument("--resume", default="",
+                    help="training checkpoint to serve (validated "
+                         "against --algo's stamp)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -34,7 +49,16 @@ def main(argv=None):
         cfg = smoke_variant(cfg)
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
+
+    algo = registry.get(args.algo)
+    pcfg = algo.canonicalize_cfg(ParleConfig(n_replicas=args.replicas))
+    state = algo.init(model.init(key), pcfg)
+    if args.resume:
+        state = ckpt.restore(args.resume, state, algo=args.algo)
+    params = algo.deployable(state)
+    print(json.dumps({"serving": args.algo, "arch": cfg.name,
+                      "replicas": pcfg.n_replicas,
+                      "restored": bool(args.resume)}), flush=True)
 
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                          batch_size=args.batch, seed=args.seed,

@@ -53,8 +53,12 @@ def build_argparser():
                     help="fused Pallas updates (interpret on CPU)")
     ap.add_argument("--mesh", default="",
                     help="shard replicas over a device mesh, e.g. "
-                         "'replica:4'; parle syncs lower to one all-reduce "
-                         "every L steps, elastic_sgd/sgd to one per step")
+                         "'replica:4' or 'replica:2,data:2,model:2'; parle "
+                         "syncs lower to one all-reduce every L steps, "
+                         "elastic_sgd/sgd to one per step.  'data'/'model' "
+                         "axes run planner-driven FSDP x TP INSIDE each "
+                         "replica (state leaves shard as (replica, "
+                         "*plan(leaf)))")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force this many XLA host-platform devices "
                          "(CPU-only; must be set before jax initializes)")
@@ -109,10 +113,19 @@ def main(argv=None):
         except FileNotFoundError:       # sidecar-less foreign checkpoint
             start = 0
     if mesh is not None:
+        from repro.sharding import partition, planner
         step_fn = algo.make_sharded_step(model.loss, pcfg, mesh,
                                          replica_axis=raxis,
                                          use_kernel=args.use_kernel)
+        inner_axes = planner.in_replica_axes(mesh, raxis)
+        if inner_axes:
+            # place the state on its planner shardings up front: each
+            # device holds 1/(data*model) of every leaf, so configs too
+            # big for one device's HBM are loadable from step 0
+            specs = algo.state_pspecs(raxis, params=params, mesh=mesh)
+            state = jax.device_put(state, partition.shardings(mesh, specs))
         print(json.dumps({"mesh": dict(mesh.shape), "replica_axis": raxis,
+                          "in_replica_axes": list(inner_axes),
                           "replicas_per_device": n // mesh.shape[raxis]}))
     else:
         step_fn = jax.jit(algo.make_step(model.loss, pcfg,

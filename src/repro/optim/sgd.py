@@ -113,11 +113,43 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
     all-reduce per step — the O(2nN) baseline of §4.1.
 
     ``use_kernel`` is accepted for protocol uniformity (SGD's update is
-    a single fused-multiply stream; XLA already emits it fused)."""
-    del use_kernel
-    from jax.sharding import PartitionSpec as P
+    a single fused-multiply stream; XLA already emits it fused).
 
+    In-replica mesh axes ("data"/"model") FSDP x TP shard the model and
+    its momentum via the sharding planner.  Because SGD's state carries
+    NO replica axis (one replicated model), the composed-mesh variant
+    runs as pure GSPMD jit — batch shards ride ``replica_axis`` via a
+    sharding constraint and the grad mean over the leading axis lowers
+    to the same per-step all-reduce, now shard-size bytes per device.
+    (A shard_map whose entire state is replicated over the manual axis
+    trips XLA's manual-subgroup propagation inside lax.scan on current
+    jax; the pure-GSPMD formulation is the supported spelling.)"""
+    del use_kernel
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import planner
     from repro.sharding.partition import make_sharded_step_fn, sgd_state_pspecs
+
+    if planner.make_shard_context(mesh, replica_axis) is not None:
+        n_dev = mesh.shape[replica_axis]
+        if cfg.n_replicas % n_dev != 0:
+            raise ValueError(
+                f"n_replicas={cfg.n_replicas} not divisible by "
+                f"mesh axis {replica_axis!r} of size {n_dev}")
+        local_step = _make_step_body(loss_fn, cfg, weight_decay, None,
+                                     lr_schedule)
+        cst_state = lambda st: st._replace(
+            params=planner.constrain_tree(st.params, mesh, lead=0),
+            v=planner.constrain_tree(st.v, mesh, lead=0))
+        bspec = NamedSharding(mesh, P(replica_axis))
+
+        def step(state, batch):
+            batch = jax.tree.map(
+                lambda b: jax.lax.with_sharding_constraint(b, bspec), batch)
+            new_state, metrics = local_step(cst_state(state), batch)
+            return cst_state(new_state), metrics
+
+        return jax.jit(step)
 
     local_step = _make_step_body(loss_fn, cfg, weight_decay, replica_axis,
                                  lr_schedule)

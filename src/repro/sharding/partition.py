@@ -1,82 +1,39 @@
-"""Partition rules: FSDP (over "data") x tensor-parallel (over "model"),
+"""Partition specs: FSDP (over "data") x tensor-parallel (over "model"),
 with Parle replicas riding the dedicated replica axis ("pod" on the
 multi-pod mesh, "replica" on the single-pod Parle mesh).
 
-``spec_for_path`` maps a pytree leaf (by its key path + shape) to a
-PartitionSpec; ``param_specs``/``state_specs`` apply it over whole trees.
-Stacked layer weights (under "blocks"/"layers") get a leading None for
-the scan axis; Parle/optimizer states get the replica axis prepended.
+The per-leaf assignment lives in the sharding planner
+(:mod:`repro.sharding.planner` walking the per-family rule tables of
+:mod:`repro.sharding.rules`); this module keeps the tree-level surface
+every consumer imports: ``param_pspecs``/``sanitize_pspecs`` for
+parameter trees, the ``*_state_pspecs`` families for optimizer states
+(prefix form for shard_map, planner form for per-leaf FSDP x TP), and
+``make_sharded_step_fn`` — the one jit(shard_map) wrapper, now with the
+in-replica mesh axes left ``auto`` so GSPMD runs FSDP x TP inside each
+replica under the same shard_map.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.sharding import planner as planner_mod
+
 DATA, MODEL = "data", "model"
-
-_REPLICATED_SUFFIXES = (
-    "ln", "ln1", "ln2", "ln_f", "norm", "patch_ln",
-    "bq", "bk", "bv", "b", "b1", "b2", "b3", "conv_b",
-    "A_log", "D", "dt_bias",
-)
-
-
-def _path_names(path):
-    out = []
-    for p in path:
-        if hasattr(p, "key"):
-            out.append(str(p.key))
-        elif hasattr(p, "name"):
-            out.append(str(p.name))
-        else:
-            out.append(str(getattr(p, "idx", p)))
-    return out
 
 
 def spec_for_path(names, shape) -> P:
-    """Core rule table (without stack/replica prefixes)."""
-    leaf = names[-1] if names else ""
-    ndim = len(shape)
-
-    if leaf in _REPLICATED_SUFFIXES or ndim <= 1:
-        return P(*([None] * ndim))
-
-    if leaf == "embed":
-        if ndim == 3:                       # audio: (K, V, d)
-            return P(None, DATA, MODEL)
-        return P(DATA, MODEL)               # (V, d)
-    if leaf == "head":
-        return P(DATA, MODEL)               # (d, V): vocab-parallel out
-    if leaf == "router":
-        return P(DATA, None)
-    if ndim == 3:                           # MoE expert stacks (E, ., .)
-        if leaf == "w_down":
-            return P(MODEL, None, DATA)     # (E, ff, d)
-        return P(MODEL, DATA, None)         # (E, d, ff)
-    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
-        return P(DATA, MODEL)
-    if leaf in ("wo", "w_down", "out_proj"):
-        return P(MODEL, DATA)
-    if leaf == "conv_w":
-        return P(None, MODEL)
-    if ndim == 2:
-        return P(DATA, MODEL)
-    return P(*([None] * ndim))
-
-
-def _maybe_stacked(names, shape):
-    """Strip the scan (layer-stack) axis for leaves under blocks/layers."""
-    if any(n in ("blocks", "layers") for n in names):
-        inner = spec_for_path(names, shape[1:])
-        return P(None, *inner)
-    return spec_for_path(names, shape)
+    """Core rule table (without stack/replica prefixes) — planner-backed."""
+    _, spec = planner_mod.match_rule_flat(tuple(names), tuple(shape))
+    return spec
 
 
 def param_pspecs(params, policy: str = "fsdp_tp") -> Any:
-    """PartitionSpec tree for a (un-replicated) parameter tree.
+    """PartitionSpec tree for a (un-replicated) parameter tree, from the
+    sharding planner's rule tables.
 
     policy:
       fsdp_tp  — weights sharded over BOTH axes (ZeRO-3 x tensor
@@ -87,32 +44,13 @@ def param_pspecs(params, policy: str = "fsdp_tp") -> Any:
                  weight-gather traffic — the right choice for decode
                  and for models whose params/16 fit HBM (see
                  EXPERIMENTS.md §Perf).
+      dp_only  — no tensor parallelism: the "model" axis is repurposed
+                 as extra data parallelism; weights ZeRO-shard over the
+                 combined axes where divisible (sanitize_pspecs drops
+                 the rest).  The right choice when d_model is too small
+                 for 16-way TP (see EXPERIMENTS.md §Perf, internvl2-1b).
     """
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    specs = [_maybe_stacked(_path_names(p), l.shape) for p, l in flat]
-    if policy == "tp_only":
-        specs = [P(*[None if ax == DATA else ax for ax in sp]) for sp in specs]
-    elif policy == "dp_only":
-        # no tensor parallelism: the "model" axis is repurposed as extra
-        # data parallelism; weights ZeRO-shard over the combined axes
-        # where divisible (sanitize_pspecs drops the rest).  The right
-        # choice when d_model is too small for 16-way TP (see
-        # EXPERIMENTS.md §Perf, internvl2-1b).
-        def conv(sp):
-            out, used = [], False
-            for ax in sp:
-                if ax == DATA and not used:
-                    out.append((DATA, MODEL))
-                    used = True
-                elif ax == MODEL or ax == DATA:
-                    out.append(None)
-                else:
-                    out.append(ax)
-            return P(*out)
-        specs = [conv(sp) for sp in specs]
-    elif policy != "fsdp_tp":
-        raise ValueError(policy)
-    return jax.tree_util.tree_unflatten(treedef, specs)
+    return planner_mod.plan_tree(params, policy=policy).pspecs()
 
 
 def prepend_axis(pspec_tree, axis_name: Optional[str]):
@@ -121,43 +59,79 @@ def prepend_axis(pspec_tree, axis_name: Optional[str]):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def parle_state_pspecs(replica_axis: str):
-    """Prefix-spec tree for a ``ParleState``: the five (n, ...) iterate
-    trees shard their leading replica axis over ``replica_axis``; the
-    step counter and the scoping scalars are replicated.
+def parle_state_pspecs(replica_axis: str, params=None,
+                       mesh: Optional[Mesh] = None):
+    """Spec tree for a ``ParleState``.
 
-    Returned as a pytree *prefix* (one P per state field), the form
-    shard_map's in_specs/out_specs consume directly.
+    Without ``params`` (legacy/prefix form): the five (n, ...) iterate
+    trees shard ONLY their leading replica axis over ``replica_axis``;
+    the step counter and the scoping scalars are replicated.  This is
+    the form shard_map's in_specs/out_specs consume (specs there may
+    reference only the manual replica axis).
+
+    With ``params`` (planner form): every iterate leaf gets the full
+    composed spec ``P(replica_axis, *plan(leaf))`` — FSDP over "data",
+    tensor-parallel over "model", replicas over ``replica_axis`` — so
+    per-device state is shard-sized.  ``mesh`` sanitizes divisibility.
+    Returned as a prefix tree (per-leaf under the iterate fields, single
+    replicated specs for step/scopes), the form jax.device_put and
+    jit in_shardings consume.
     """
     from repro.core.parle import ParleState
-    rep = P(replica_axis)
+    if params is None:
+        rep = P(replica_axis)
+        return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
+                          step=P(), scopes=P())
+    plan = planner_mod.plan_tree(params, mesh=mesh)
+    rep = plan.pspecs_with_leading(replica_axis)
     return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
                       step=P(), scopes=P())
 
 
-def elastic_state_pspecs(replica_axis: str):
-    """Prefix-spec tree for an ``ElasticState``: workers and their
-    momentum shard the leading replica axis; the reference variable is
-    replicated (every device applies the identical Eq. (7b) update)."""
+def elastic_state_pspecs(replica_axis: str, params=None,
+                         mesh: Optional[Mesh] = None):
+    """Spec tree for an ``ElasticState``: workers and their momentum
+    shard the leading replica axis; the reference variable carries no
+    replica axis (every device applies the identical Eq. (7b) update to
+    its shard).  With ``params``, the planner composes FSDP x TP specs
+    under the replica axis (see :func:`parle_state_pspecs`)."""
     from repro.core.elastic_sgd import ElasticState
-    rep = P(replica_axis)
-    return ElasticState(x=rep, ref=P(), v=rep, step=P(), scopes=P())
+    if params is None:
+        rep = P(replica_axis)
+        return ElasticState(x=rep, ref=P(), v=rep, step=P(), scopes=P())
+    plan = planner_mod.plan_tree(params, mesh=mesh)
+    rep = plan.pspecs_with_leading(replica_axis)
+    return ElasticState(x=rep, ref=plan.pspecs(), v=rep, step=P(), scopes=P())
 
 
-def sgd_state_pspecs():
-    """Prefix-spec tree for an ``SGDState`` under the data-parallel mesh
-    path: params and momentum replicated (grads are pmean'd, so every
-    device holds the identical model)."""
+def sgd_state_pspecs(params=None, mesh: Optional[Mesh] = None):
+    """Spec tree for an ``SGDState`` under the data-parallel mesh path:
+    nothing rides the replica axis (grads are pmean'd, so every replica
+    holds the identical model) but with ``params`` the model and its
+    momentum still FSDP x TP shard over the in-replica axes."""
     from repro.optim.sgd import SGDState
-    return SGDState(params=P(), v=P(), step=P())
+    if params is None:
+        return SGDState(params=P(), v=P(), step=P())
+    plan = planner_mod.plan_tree(params, mesh=mesh)
+    return SGDState(params=plan.pspecs(), v=plan.pspecs(), step=P())
 
 
 def make_sharded_step_fn(local_step, mesh, replica_axis: str, state_specs,
-                         metric_specs, n_replicas: int):
+                         metric_specs, n_replicas: int,
+                         constrain: Optional[Callable] = None):
     """The one jit(shard_map) wrapper behind every Algorithm's sharded
     path: batch's leading replica axis sharded over ``replica_axis``,
     state per ``state_specs``.  ``n_replicas`` is validated against the
-    mesh so each device gets a whole number of replicas."""
+    mesh so each device gets a whole number of replicas.
+
+    Mesh axes other than ``replica_axis`` are left ``auto``: inside the
+    shard_map body only the replica axis is manual, and GSPMD shards the
+    remaining dims over the in-replica axes (FSDP over "data", TP over
+    "model") following the planner constraints that ``constrain`` —
+    a state -> state function built from :mod:`repro.sharding.planner` —
+    applies to the body's inputs and outputs.  On a replica-only mesh
+    both degenerate to the PR-1 behavior exactly.
+    """
     import jax
 
     from repro.utils.compat import shard_map
@@ -167,35 +141,44 @@ def make_sharded_step_fn(local_step, mesh, replica_axis: str, state_specs,
         raise ValueError(
             f"n_replicas={n_replicas} not divisible by "
             f"mesh axis {replica_axis!r} of size {n_dev}")
-    return jax.jit(shard_map(local_step, mesh,
+    # only axes that do real in-replica work go auto (size-1 axes stay
+    # manual: keeps replica-only meshes on the PR-1 fully-manual path,
+    # which compat.shard_map supports on every jax build)
+    auto = frozenset(planner_mod.in_replica_axes(mesh, replica_axis))
+
+    step = local_step
+    if constrain is not None:
+        def step(state, batch):
+            out_state, metrics = local_step(constrain(state), batch)
+            return constrain(out_state), metrics
+
+    return jax.jit(shard_map(step, mesh,
                              in_specs=(state_specs, P(replica_axis)),
-                             out_specs=(state_specs, metric_specs)))
+                             out_specs=(state_specs, metric_specs),
+                             auto=auto))
 
 
 def sanitize_pspecs(pspec_tree, sds_tree, mesh: Mesh):
     """Drop mesh axes that do not evenly divide the corresponding array
     dimension — pjit ARGUMENT shardings must divide exactly (vocab sizes
-    like 151655 or expert counts like 60 don't divide a 16-wide axis)."""
+    like 151655 or expert counts like 60 don't divide a 16-wide axis).
 
-    def fix(spec, leaf):
+    Every demotion is logged once per process (logger
+    ``repro.sharding``): a leaf silently falling back to replicated is a
+    planner gap, and planner gaps must be visible.
+    """
+    axis_sizes = dict(mesh.shape)
+
+    def fix(path, spec, leaf):
         if not isinstance(spec, P):
             return spec
-        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
-        out = []
-        for dim_size, axis in zip(leaf.shape, dims):
-            if axis is None:
-                out.append(None)
-                continue
-            names = axis if isinstance(axis, tuple) else (axis,)
-            total = 1
-            for nm in names:
-                total *= mesh.shape.get(nm, 1)
-            out.append(axis if (dim_size % total == 0 and dim_size >= total)
-                       else None)
-        return P(*out)
+        names = planner_mod.path_names(path)
+        out, _ = planner_mod._sanitize(spec, tuple(leaf.shape), axis_sizes,
+                                       names, warn=True)
+        return out
 
-    return jax.tree.map(fix, pspec_tree, sds_tree,
-                        is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map_with_path(
+        fix, pspec_tree, sds_tree, is_leaf=lambda x: isinstance(x, P))
 
 
 def shardings(mesh: Mesh, pspec_tree):

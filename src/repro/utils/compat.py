@@ -27,18 +27,32 @@ except ImportError:                      # jax <= 0.5
 _SM_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
 
 
-def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False,
+              auto: frozenset = frozenset()):
     """``shard_map`` with replication checking toggled portably.
 
     ``check`` maps to ``check_vma`` (new) or ``check_rep`` (old) —
     both default to True upstream, but every use in this repo wants the
     check off (pmean inside a cond is not rep-invariant to the checker).
+
+    ``auto``: mesh axes left to GSPMD *inside* the body (partial-manual
+    shard_map) — the in-replica FSDP/TP axes of the planner-sharded
+    path.  Raises on jax builds whose shard_map lacks the parameter,
+    but only when a non-empty ``auto`` is actually requested.
     """
     kw = {}
     if "check_vma" in _SM_PARAMS:
         kw["check_vma"] = check
     elif "check_rep" in _SM_PARAMS:
         kw["check_rep"] = check
+    if auto:
+        if "auto" not in _SM_PARAMS:
+            raise NotImplementedError(
+                "this jax's shard_map has no `auto` parameter; the "
+                "composed replica+data/model mesh path needs it — use a "
+                "replica-only --mesh, or a jax with partial-manual "
+                "shard_map support")
+        kw["auto"] = auto
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kw)
 

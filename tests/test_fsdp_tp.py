@@ -1,0 +1,141 @@
+"""FSDP x TP inside a replica, composed with the replica axis (the
+sharding-planner subsystem end to end).
+
+The 8-device checks run in a SUBPROCESS (same rationale as
+test_distributed_sync.py: XLA locks the host device count at first
+backend init).  One child interpreter covers, on a real (small dense
+transformer) model under ``replica:2,data:2,model:2``:
+
+  * planner-sharded state: every iterate leaf lands as
+    ``P("replica", *plan(leaf))`` on device;
+  * sharded == local equivalence across sync boundaries (losses and the
+    deployable average);
+  * the compiled-HLO per-axis claim: the Eq. (8d) sync all-reduce rides
+    the REPLICA axis at <= shard-size + eps bytes/device (shard = model
+    bytes / |data x model|), while the per-step entry collectives on the
+    replica axis are only the scalar loss pmean — FSDP/TP traffic stays
+    on the in-replica axes;
+  * the fused Pallas kernel path (nested shard_map over the in-replica
+    axes) matching the XLA path.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_CHILD = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 8, jax.devices()
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import ModelConfig, ParleConfig
+    from repro.core import parle, registry
+    from repro.launch.hlo_stats import collective_bytes_by_axis
+    from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
+    from repro.models.model import build_model
+    from repro.sharding import partition, planner
+    from repro.data.synthetic import TokenStream, replica_batches
+
+    mcfg = ModelConfig(name="t-dense", family="dense", num_layers=2,
+                       d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                       vocab_size=512, head_dim=32)
+    model = build_model(mcfg)
+    algo = registry.get("parle")
+    cfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=2, L=3, lr=0.1, lr_inner=0.1, batches_per_epoch=5))
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(vocab_size=mcfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=0)
+
+    mesh = make_mesh_from_spec("replica:2,data:2,model:2")
+    raxis = replica_axis_of(mesh)
+    assert raxis == "replica"
+    assert planner.in_replica_axes(mesh, raxis) == ("data", "model")
+
+    # ---- planner-sharded state placement ----
+    specs = algo.state_pspecs(raxis, params=params, mesh=mesh)
+    st_sh = jax.device_put(algo.init(params, cfg),
+                           partition.shardings(mesh, specs))
+    wq = st_sh.x["blocks"]["attn"]["wq"]
+    assert wq.sharding.spec == P("replica", None, "data", "model"), \\
+        wq.sharding.spec
+    # per-device shard is 1/8 of the global leaf
+    assert wq.addressable_shards[0].data.size * 8 == wq.size
+
+    # ---- sharded == local across sync boundaries ----
+    st_loc = algo.init(params, cfg)
+    step_loc = jax.jit(algo.make_step(model.loss, cfg))
+    step_sh = algo.make_sharded_step(model.loss, cfg, mesh,
+                                     replica_axis=raxis)
+    for i in range(7):                  # crosses two L=3 sync boundaries
+        batch = replica_batches(stream, i, 2, 2)
+        st_loc, m_loc = step_loc(st_loc, batch)
+        st_sh, m_sh = step_sh(st_sh, batch)
+        np.testing.assert_allclose(float(m_sh["loss"]),
+                                   float(m_loc["loss"]),
+                                   rtol=2e-5)
+    dep_loc = algo.deployable(st_loc)
+    dep_sh = algo.deployable(st_sh)
+    for a, b in zip(jax.tree.leaves(dep_loc), jax.tree.leaves(dep_sh)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-5, atol=2e-6)
+    print("FSDP_TP_EQUIV_OK")
+
+    # ---- per-axis compiled-HLO claim ----
+    st_hlo = jax.device_put(algo.init(params, cfg),
+                            partition.shardings(mesh, specs))
+    batch0 = replica_batches(stream, 0, 2, 2)
+    hlo = step_sh.lower(st_hlo, batch0).compile().as_text()
+    axes = dict(mesh.shape)
+    total = collective_bytes_by_axis(hlo, axes)
+    entry = collective_bytes_by_axis(hlo, axes, scope="entry")
+
+    nparam = sum(l.size for l in jax.tree.leaves(params))
+    shard_bytes = nparam * 4 // 4           # f32, / |data x model| = 4
+    rep_total = sum(total["by_axis"].get(raxis, {}).values())
+    rep_entry = sum(entry["by_axis"].get(raxis, {}).values())
+    # sync all-reduce: <= one shard of the model + eps (loss pmean +
+    # per-leaf padding); "eps" here is 4KiB against a 375KiB shard
+    assert shard_bytes <= rep_total <= shard_bytes + 4096, \\
+        (rep_total, shard_bytes, total)
+    # per-step (entry) replica traffic: ONLY the scalar loss pmean
+    assert rep_entry <= 64, (rep_entry, entry)
+    # FSDP/TP collectives exist and ride the in-replica axes only
+    inner = [k for k in total["by_axis"] if k not in (raxis, "none")]
+    assert inner, total
+    assert "other" not in total["by_axis"], total
+    print("FSDP_TP_HLO_OK")
+
+    # ---- fused Pallas kernel path (nested shard_map) ----
+    st_k = jax.device_put(algo.init(params, cfg),
+                          partition.shardings(mesh, specs))
+    step_k = algo.make_sharded_step(model.loss, cfg, mesh,
+                                    replica_axis=raxis, use_kernel=True)
+    st_x = jax.device_put(algo.init(params, cfg),
+                          partition.shardings(mesh, specs))
+    for i in range(4):                  # crosses the L=3 sync boundary
+        batch = replica_batches(stream, i, 2, 2)
+        st_k, m_k = step_k(st_k, batch)
+        st_x, m_x = step_sh(st_x, batch)
+        np.testing.assert_allclose(float(m_k["loss"]), float(m_x["loss"]),
+                                   rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(st_k.x), jax.tree.leaves(st_x.x)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    print("FSDP_TP_KERNEL_OK")
+""")
+
+
+def test_fsdp_tp_composed_mesh_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + res.stderr
+    for tag in ("FSDP_TP_EQUIV_OK", "FSDP_TP_HLO_OK", "FSDP_TP_KERNEL_OK"):
+        assert tag in res.stdout, res.stdout

@@ -1,0 +1,188 @@
+"""The sharding-planner subsystem (sharding/planner.py + rules.py).
+
+Covers:
+  * rule provenance: every leaf of every assigned architecture matches a
+    NAMED rule (nothing silently lands on the "fallback" catch-all);
+  * per-family assignments (attention column/row split, MoE expert
+    stacks, mamba2 conv, audio 3-D embeds, conv HWIO kernels);
+  * policy transforms (tp_only / dp_only) through the planner;
+  * the divisibility sanitizer: demotes + logs ONCE per process, both
+    for indivisible dims and for axes absent from the mesh;
+  * replica-axis composition (pspecs_with_leading) and the planner-form
+    state pspecs of all four algorithms.
+"""
+import logging
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, smoke_variant
+from repro.models.model import build_model
+from repro.sharding import planner, rules
+from repro.sharding.partition import param_pspecs, sanitize_pspecs
+
+
+def _mesh(shape, axes):
+    import numpy as np
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+# ------------------------------------------------------------------
+# Rule provenance
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_every_leaf_matches_a_named_rule(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    p_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    plan = planner.plan_tree(p_sds)
+    by_rule = plan.by_rule()
+    assert "fallback" not in by_rule, by_rule.get("fallback")
+    # the plan covers every leaf, in tree order
+    assert len(plan.leaves) == len(jax.tree.leaves(p_sds))
+
+
+def test_rule_table_fallback_is_last_and_total():
+    assert rules.RULE_TABLE[-1][0] == "fallback"
+    # fallback always matches, whatever the leaf looks like
+    assert rules.fallback_rule(("anything",), (3, 5, 7)) == P(None, None, None)
+
+
+def test_attention_column_row_split():
+    assert rules.attention_rule(("wq",), (64, 64)) == P("data", "model")
+    assert rules.attention_rule(("wo",), (64, 64)) == P("model", "data")
+    name, spec = planner.match_rule(("blocks", "attn", "wq"), (4, 64, 64))
+    assert name == "attention" and spec == P(None, "data", "model")
+
+
+def test_moe_expert_stacks():
+    assert rules.moe_rule(("moe", "w_gate"), (8, 64, 256)) == \
+        P("model", "data", None)
+    assert rules.moe_rule(("moe", "w_down"), (8, 256, 64)) == \
+        P("model", None, "data")
+    assert rules.moe_rule(("moe", "router"), (64, 8)) == P("data", None)
+    # shared-expert mats are 2-D: the moe rule defers to attention
+    assert rules.moe_rule(("shared", "w_gate"), (64, 256)) is None
+    name, _ = planner.match_rule(("blocks", "moe", "shared", "w_gate"),
+                                 (4, 64, 256))
+    assert name == "attention"
+
+
+def test_mamba2_and_audio_and_conv():
+    assert rules.mamba2_rule(("conv_w",), (4, 256)) == P(None, "model")
+    name, spec = planner.match_rule(("embed",), (4, 512, 128))
+    assert name == "embedding" and spec == P(None, "data", "model")
+    name, spec = planner.match_rule(("c1", "w"), (3, 3, 32, 64))
+    assert name == "conv" and spec == P(None, None, "data", "model")
+    # per-head scalar banks stay replicated by NAME, not just by ndim
+    name, _ = planner.match_rule(("blocks", "A_log"), (4, 16))
+    assert name == "replicated"
+
+
+def test_policies_through_param_pspecs():
+    params = {"wq": jnp.zeros((8, 8)), "ln": jnp.ones((8,))}
+    fsdp = param_pspecs(params)
+    tp = param_pspecs(params, policy="tp_only")
+    dp = param_pspecs(params, policy="dp_only")
+    assert fsdp["wq"] == P("data", "model")
+    assert tp["wq"] == P(None, "model")
+    assert dp["wq"] == P(("data", "model"), None)
+    assert fsdp["ln"] == tp["ln"] == dp["ln"] == P(None)
+    with pytest.raises(ValueError, match="policy"):
+        param_pspecs(params, policy="nope")
+
+
+# ------------------------------------------------------------------
+# Sanitizer: demote + log once (the silent-fallthrough fix)
+# ------------------------------------------------------------------
+
+def test_sanitizer_demotes_and_logs_once(caplog):
+    mesh = _mesh((2, 2), ("data", "model"))
+    # 7 not divisible by data:2 -> dim 0 demoted
+    params = {"odd": jax.ShapeDtypeStruct((7, 4), jnp.float32)}
+    planner._WARNED.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        plan = planner.plan_tree(params, mesh=mesh)
+    assert plan.leaves[0].spec == P(None, "model")
+    assert plan.leaves[0].demoted == (0,)
+    assert plan.leaves[0].raw_spec == P("data", "model")
+    msgs = [r for r in caplog.records if "demoted" in r.message]
+    assert len(msgs) == 1 and "odd" in msgs[0].message
+    # second plan of the same tree: no new warning (once per process)
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        planner.plan_tree(params, mesh=mesh)
+    assert not [r for r in caplog.records if "demoted" in r.message]
+
+
+def test_sanitizer_drops_axes_missing_from_mesh():
+    mesh = _mesh((2,), ("replica",))     # no data/model axes at all
+    params = {"wq": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    plan = planner.plan_tree(params, mesh=mesh)
+    assert plan.leaves[0].spec == P(None, None)
+
+
+def test_sanitize_pspecs_tree_surface(caplog):
+    mesh = _mesh((2, 2), ("data", "model"))
+    sds = {"w": jax.ShapeDtypeStruct((6, 6), jnp.float32),
+           "v": jax.ShapeDtypeStruct((5, 6), jnp.float32)}
+    specs = {"w": P("data", "model"), "v": P("data", "model")}
+    planner._WARNED.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        out = sanitize_pspecs(specs, sds, mesh)
+    assert out["w"] == P("data", "model")
+    assert out["v"] == P(None, "model")
+    assert any("demoted" in r.message for r in caplog.records)
+
+
+# ------------------------------------------------------------------
+# Replica-axis composition + the four algorithms' planner-form pspecs
+# ------------------------------------------------------------------
+
+def test_pspecs_with_leading_composes_replica_axis():
+    params = {"wq": jnp.zeros((8, 8)), "ln": jnp.ones((8,))}
+    plan = planner.plan_tree(params)
+    lead = plan.pspecs_with_leading("replica")
+    assert lead["wq"] == P("replica", "data", "model")
+    assert lead["ln"] == P("replica", None)
+
+
+def test_state_pspecs_planner_form_all_algorithms():
+    from repro.core import registry
+    from repro.configs.base import ParleConfig
+    mesh = _mesh((2, 2, 2), ("replica", "data", "model"))
+    params = {"wq": jnp.zeros((8, 8))}
+    cfg = ParleConfig(n_replicas=2, batches_per_epoch=5)
+    expect_rep = P("replica", "data", "model")
+    expect_flat = P("data", "model")
+
+    sp = registry.get("parle").state_pspecs("replica", params=params,
+                                            mesh=mesh)
+    assert sp.x["wq"] == expect_rep and sp.step == P()
+
+    se = registry.get("elastic_sgd").state_pspecs("replica", params=params,
+                                                  mesh=mesh)
+    assert se.x["wq"] == expect_rep and se.ref["wq"] == expect_flat
+
+    ss = registry.get("sgd").state_pspecs("replica", params=params,
+                                          mesh=mesh)
+    assert ss.params["wq"] == expect_flat and ss.v["wq"] == expect_flat
+
+    # legacy prefix form unchanged when params is omitted
+    assert registry.get("parle").state_pspecs("replica").x == P("replica")
+
+
+def test_in_replica_axes_and_shard_context():
+    mesh3 = _mesh((2, 2, 2), ("replica", "data", "model"))
+    assert planner.in_replica_axes(mesh3, "replica") == ("data", "model")
+    mesh1 = _mesh((2, 1, 1), ("replica", "data", "model"))
+    assert planner.in_replica_axes(mesh1, "replica") == ()
+    assert planner.make_shard_context(mesh1, "replica") is None
+    ctx = planner.make_shard_context(mesh3, "replica")
+    assert ctx is not None
+    assert ctx.leaf_spec(("blocks", "attn", "wq"), (4, 8, 8)) == \
+        P(None, "data", "model")
