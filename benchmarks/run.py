@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import (bench_parle, comm_volume, fig1_overlap, kernel_bench,
-                        roofline, table1_baselines, table2_split_data)
+from benchmarks import (bench_parle, bench_serve, comm_volume, fig1_overlap,
+                        kernel_bench, roofline, table1_baselines,
+                        table2_split_data)
 
 SUITES = {
     "table1": table1_baselines.main,     # Parle vs baselines (Table 1)
@@ -21,6 +22,7 @@ SUITES = {
     "kernels": kernel_bench.main,        # Pallas kernel oracle micro-bench
     "roofline": roofline.main,           # §Roofline aggregation
     "parle": bench_parle.main,           # BENCH_parle.json perf trajectory
+    "serve": bench_serve.main,           # BENCH_serve.json engine vs naive
 }
 
 

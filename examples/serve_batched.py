@@ -4,6 +4,13 @@ exercises the same prefill/decode programs the multi-pod dry-run lowers
 at full scale.  Works for any --arch, including the SSM (constant-state
 decode) and the windowed dense variants.
 
+The loop follows the fixed decode-path contract (repro/serving): the
+first generated token comes from the PREFILL logits, the cache advances
+by exactly one position per decode, and tokens/s is measured after a
+warm-up pass with ``block_until_ready`` (compile time reported
+separately).  For continuous batching over mixed-length, staggered
+requests use ``python -m repro.launch.serve`` instead.
+
     PYTHONPATH=src python examples/serve_batched.py --arch mamba2-1.3b
     PYTHONPATH=src python examples/serve_batched.py --arch llama3-8b --window 64
 """
@@ -16,8 +23,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_variant
 from repro.data.synthetic import TokenStream
-from repro.launch.steps import make_decode_step
-from repro.models.model import build_model
+from repro.models.model import build_model, cache_positions
+from repro.serving import make_naive_fns, naive_generate
 
 
 def main():
@@ -34,8 +41,9 @@ def main():
     if args.window:
         cfg = dataclasses.replace(cfg, sliding_window=args.window)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    # independent key streams: params init vs conditioning inputs
+    key_init, key_cond = jax.random.split(jax.random.PRNGKey(0))
+    params = model.init(key_init)
 
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                          batch_size=args.batch,
@@ -43,28 +51,28 @@ def main():
     batch = stream.batch(0)
     if cfg.family == "vlm":
         batch["patch_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.num_patches, cfg.d_model))
+            key_cond, (args.batch, cfg.num_patches, cfg.d_model))
     if cfg.family == "audio":
         batch["cond"] = jax.random.normal(
-            key, (args.batch, cfg.cond_len, cfg.d_model))
+            key_cond, (args.batch, cfg.cond_len, cfg.d_model))
 
-    cache = model.init_cache(params, args.batch, args.prompt_len + args.gen)
-    t0 = time.time()
-    _, cache = jax.jit(model.prefill)(params, batch, cache)
-    print(f"prefill {args.batch}x{args.prompt_len} tokens: "
-          f"{time.time()-t0:.2f}s  (family={cfg.family})")
+    fns = make_naive_fns(cfg)
+    max_len = args.prompt_len + args.gen
 
-    decode = jax.jit(make_decode_step(cfg))
-    tok = batch["tokens"][..., -1:]
-    outs = []
-    t0 = time.time()
-    for _ in range(args.gen):
-        tok, cache = decode(params, {"tokens": tok}, cache)
-        outs.append(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(outs, axis=-1)
-    print(f"decoded {gen.size} tokens in {dt:.2f}s "
-          f"({gen.size/dt:.1f} tok/s incl. compile)")
+    def one_pass():
+        cache = model.init_cache(params, args.batch, max_len)
+        t0 = time.perf_counter()
+        gen, cache = naive_generate(fns, params, batch, cache, args.gen)
+        jax.block_until_ready(gen)
+        return gen, cache, time.perf_counter() - t0
+
+    _, _, cold_s = one_pass()          # warm-up: includes jit compile
+    gen, cache, warm_s = one_pass()    # steady state
+    pos = int(jnp.asarray(cache_positions(cache))[()])
+    assert pos == args.prompt_len + args.gen - 1, pos
+    print(f"decoded {gen.size} tokens in {warm_s:.3f}s "
+          f"({gen.size / warm_s:.1f} tok/s; compile {cold_s - warm_s:.2f}s; "
+          f"family={cfg.family})")
     print("sample:", jnp.asarray(gen).reshape(-1)[:12].tolist())
 
 

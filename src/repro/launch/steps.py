@@ -97,15 +97,17 @@ def make_prefill_step(cfg, use_flash: bool = False):
     return prefill
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, sampling=None):
+    """One-token decode + token selection.  Selection rides the serving
+    sampler (greedy by default), so this, the naive reference loop, and
+    the continuous-batching engine share one code path."""
+    from repro.serving.sampling import SamplingParams, make_token_selector
     model = build_model(cfg)
+    selector = make_token_selector(cfg, sampling or SamplingParams())
 
-    def decode(params, batch, cache):
+    def decode(params, batch, cache, key=None):
         logits, cache = model.decode(params, batch, cache)
-        if cfg.family == "audio":
-            next_tok = jnp.argmax(logits[:, -1], axis=-1)       # (B, K)
-            next_tok = next_tok[:, :, None].astype(jnp.int32)   # (B, K, 1)
-        else:
-            next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        return next_tok, cache
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return selector(logits, key), cache
     return decode

@@ -20,7 +20,9 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array        # (B, S, KV, hd) — S = sliding_window if windowed
     v: jax.Array        # (B, S, KV, hd)
-    pos: jax.Array      # () int32 — number of tokens already absorbed
+    pos: jax.Array      # () or (B,) int32 — tokens already absorbed.
+                        # A (B,) vector gives every batch row (= serving
+                        # slot) its own offset; decode handles both.
 
 
 def init_attn_params(key, cfg, dtype=jnp.float32):
@@ -179,32 +181,41 @@ def attn_prefill(params, cfg, x, positions, cache: KVCache, use_flash=False):
 
 
 def attn_decode(params, cfg, x, cache: KVCache):
-    """One-token decode.  x: (B, 1, d).  Rolling window if configured."""
+    """One-token decode.  x: (B, 1, d).  Rolling window if configured.
+
+    ``cache.pos`` may be a scalar (whole batch at one offset — the
+    training-test path) or a (B,) vector (per-row offsets — the serving
+    engine's slot batch, where every row is a different request).
+    """
     B, _, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     S = cache.k.shape[1]
-    pos = cache.pos                                        # () int32
+    pos = cache.pos                                        # () or (B,) int32
+    posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)   # (B,)
     q = jnp.einsum("btd,de->bte", x, params["wq"])
     k = jnp.einsum("btd,de->bte", x, params["wk"])
     v = jnp.einsum("btd,de->bte", x, params["wv"])
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
-    posb = jnp.broadcast_to(pos, (B, 1))
+    posb = posv[:, None]                                   # (B, 1)
     q = apply_rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta)
     k = apply_rope(k.reshape(B, 1, KV, hd), posb, cfg.rope_theta)
     v = v.reshape(B, 1, KV, hd)
 
     if cfg.sliding_window:
-        slot = pos % S          # rolling ring buffer
+        slot = posv % S         # rolling ring buffer
     else:
-        slot = jnp.minimum(pos, S - 1)
-    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        slot = jnp.minimum(posv, S - 1)
+    write = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0, 0)))
+    ck = write(cache.k, k, slot)
+    cv = write(cache.v, v, slot)
 
     kk = _repeat_kv(ck, H // KV)
     vv = _repeat_kv(cv, H // KV)
     # valid slots: with a rolling window every slot < min(pos+1, S) is live
-    live = jnp.arange(S)[None, None, None, :] < jnp.minimum(pos + 1, S)
+    live = (jnp.arange(S)[None, None, None, :]
+            < jnp.minimum(posv + 1, S)[:, None, None, None])
     o = attention_core(q, kk, vv, live, causal=False)
     out = jnp.einsum("bte,ed->btd", o.reshape(B, 1, H * hd), params["wo"])
     return out, KVCache(ck, cv, pos + 1)

@@ -14,6 +14,17 @@ launch/specs.py):
     dense/moe/ssm/hybrid : tokens, labels
     vlm                  : tokens, labels, patch_embeds
     audio                : tokens (B,K,T), labels (B,K,T), cond
+
+Cache position contract (``cache_positions`` / ``with_cache_positions``):
+every cache pytree carries one or more ``pos`` leaves counting tokens
+absorbed so far.  ``prefill`` over T tokens advances pos by EXACTLY T and
+each ``decode`` call by EXACTLY 1 — so after prefill(T) + G decodes,
+``cache_positions(cache) == T + G``.  The first generated token comes
+from the PREFILL logits (``logits[:, -1]``); feeding the last prompt
+token through ``decode`` instead writes its KV twice (slots T-1 and T)
+and shifts every later position by one.  ``pos`` may be a scalar or a
+(B,) vector — the serving engine uses the vector form so every batch
+row (slot) keeps its own offset.
 """
 from __future__ import annotations
 
@@ -40,6 +51,44 @@ class Model:
     init_cache: Callable         # (params, batch_size, max_len) -> cache
     prefill: Callable            # (params, batch, cache) -> (logits, cache)
     decode: Callable             # (params, batch, cache) -> (logits, cache)
+
+
+def is_pos_entry(entry) -> bool:
+    """Whether a tree-path entry names a cache position counter."""
+    name = getattr(entry, "name", getattr(entry, "key", None))
+    return name == "pos"
+
+
+def cache_positions(cache):
+    """The cache's token count: () or (B,) int32.
+
+    Every cache NamedTuple (KVCache / SSMCache / HybridCache, nested or
+    not) tags its counters as ``pos`` leaves; they all advance in
+    lockstep, so any one of them is *the* position.  Returns the first.
+    """
+    leaves = jax.tree_util.tree_leaves_with_path(cache)
+    for path, leaf in leaves:
+        if path and is_pos_entry(path[-1]):
+            return leaf
+    raise ValueError("cache has no 'pos' leaf")
+
+
+def with_cache_positions(cache, pos):
+    """Return ``cache`` with EVERY ``pos`` leaf replaced by ``pos``.
+
+    Passing a (num_slots,) vector switches the cache to per-slot
+    offsets — the layout the serving engine decodes with.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def repl(path, leaf):
+        if path and is_pos_entry(path[-1]):
+            # a fresh buffer per leaf: caches with several pos leaves
+            # (HybridCache) must not alias, or donation rejects them
+            return pos.copy()
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(repl, cache)
 
 
 def _lm_loss(hidden_fn, cfg):

@@ -1,0 +1,28 @@
+"""Continuous-batching inference engine over the registry's
+``deployable(state)`` surface.
+
+Layers (bottom up):
+
+* ``sampling``  — greedy / temperature / top-k token selection, one
+  code path shared by the engine and the naive loop.
+* ``cache``     — slot-batch KV/SSM cache manager layered on
+  ``model.init_cache``: per-slot position vectors, single-request
+  prefill caches copied into slots.
+* ``request``   — the host-side request record (prompt, budget, EOS,
+  arrival time, per-request conditioning).
+* ``scheduler`` — fixed-size slot scheduler: FIFO admission, EOS /
+  max-new-tokens termination, slot reuse.
+* ``engine``    — the driver: per-length compiled prefill, a fused
+  ``lax.scan`` multi-token decode chunk with donated cache buffers,
+  admission between chunks.
+* ``naive``     — the (fixed) one-request-at-a-time reference loop the
+  engine is exact-matched against.
+"""
+from repro.serving.engine import Engine
+from repro.serving.naive import make_naive_fns, naive_generate
+from repro.serving.request import Request
+from repro.serving.sampling import SamplingParams, make_token_selector
+from repro.serving.scheduler import Scheduler
+
+__all__ = ["Engine", "Request", "SamplingParams", "Scheduler",
+           "make_naive_fns", "make_token_selector", "naive_generate"]

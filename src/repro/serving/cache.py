@@ -1,0 +1,46 @@
+"""Slot-batch cache manager, layered on ``model.init_cache``.
+
+The engine's decode batch owns ONE cache pytree whose batch axis is the
+slot axis (every family's cache puts batch at axis 1 — layers are
+stacked at axis 0) and whose ``pos`` leaves are (num_slots,) vectors:
+each slot keeps its own explicit token offset (the per-slot
+length/position API of models/model.py).
+
+Admission copies a freshly prefilled single-request cache into a slot
+row; eviction needs no work — the next occupant overwrites the row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import is_pos_entry, with_cache_positions
+
+
+def _is_pos(path) -> bool:
+    return bool(path) and is_pos_entry(path[-1])
+
+
+def init_slot_cache(model, params, num_slots: int, max_len: int):
+    """A cache whose batch axis is the slot axis and whose positions are
+    per-slot (num_slots,) vectors, all starting at 0."""
+    cache = model.init_cache(params, num_slots, max_len)
+    return with_cache_positions(cache, jnp.zeros((num_slots,), jnp.int32))
+
+
+def _write_slot(batch_cache, one_cache, slot):
+    def repl(path, big, small):
+        if _is_pos(path):
+            # big: (num_slots,), small: () — the request's prompt length
+            return big.at[slot].set(small.astype(jnp.int32))
+        # big: (L, num_slots, ...), small: (L, 1, ...)
+        return big.at[:, slot].set(small[:, 0])
+
+    return jax.tree_util.tree_map_with_path(repl, batch_cache, one_cache)
+
+
+def make_slot_writer():
+    """Jitted (batch_cache, one_cache, slot) -> batch_cache with the
+    single-request cache copied into row ``slot``.  The slot batch
+    buffer is donated — admission updates it in place."""
+    return jax.jit(_write_slot, donate_argnums=(0,))

@@ -1,0 +1,193 @@
+"""The continuous-batching engine driver.
+
+Serves any params pytree exposing the uniform ``Model`` cache API —
+in particular ``registry.get(algo).deployable(state)``, the replica
+average Parle actually ships (§1.2).
+
+Execution model:
+
+* ADMISSION — each free slot takes the next arrived queued request: a
+  single-request prefill (compiled once per prompt length) produces the
+  request's first token from the PREFILL logits plus a populated
+  one-slot cache, which is copied into the slot batch cache (per-slot
+  position vectors — see serving/cache.py).
+* DECODE — one fused chunk per engine step: ``lax.scan`` over
+  ``decode_chunk`` single-token decodes with the slot cache donated,
+  sampling (greedy / temperature / top-k) inside the scan.  The
+  scheduler absorbs the chunk host-side, evicts finished slots (EOS or
+  max-new-tokens; tokens decoded speculatively past a termination are
+  discarded), and freed slots are refilled on the next step.
+
+Compile time never pollutes throughput numbers: every program is
+AOT-compiled (``jit(...).lower(...).compile()``) and the cost is
+accounted in ``stats["compile_s"]``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import build_model
+from repro.serving import cache as cache_lib
+from repro.serving.request import Request
+from repro.serving.sampling import SamplingParams, make_token_selector
+from repro.serving.scheduler import Scheduler
+
+
+class Engine:
+    def __init__(self, cfg, params, num_slots: int = 8, max_len: int = 256,
+                 decode_chunk: int = 8,
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.decode_chunk = decode_chunk
+        self.sampling = sampling
+        self.selector = make_token_selector(cfg, sampling)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.sched = Scheduler(num_slots)
+        self.cache = cache_lib.init_slot_cache(self.model, params,
+                                               num_slots, max_len)
+        self.writer = cache_lib.make_slot_writer()
+        tok_shape = ((num_slots, cfg.num_codebooks, 1)
+                     if cfg.family == "audio" else (num_slots, 1))
+        self.cur_tok = jnp.zeros(tok_shape, jnp.int32)
+
+        self._uid = 0
+        self._prefills = {}          # signature -> compiled prefill
+        self._decode = None          # compiled chunk
+        self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "chunks": 0}
+
+    # -- submission ---------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int, eos_id: Optional[int] = None,
+               arrival: int = 0, cond=None, patch_embeds=None) -> int:
+        req = Request(uid=self._uid, tokens=tokens,
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      arrival=arrival, cond=cond, patch_embeds=patch_embeds)
+        if req.prompt_len + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len {req.prompt_len} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_len {self.max_len}")
+        if self.cfg.family == "vlm" and patch_embeds is None:
+            raise ValueError("vlm requests need patch_embeds conditioning")
+        self._uid += 1
+        self.sched.submit(req)
+        return req.uid
+
+    # -- compiled programs --------------------------------------------
+    def _compile(self, fn, args, donate=()):
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        self.stats["compile_s"] += time.perf_counter() - t0
+        return compiled
+
+    def _prefill_compiled(self, batch, one_cache):
+        sig = tuple(sorted((k, v.shape) for k, v in batch.items()))
+        if sig not in self._prefills:
+            self._prefills[sig] = self._compile(
+                self.model.prefill, (self.params, batch, one_cache))
+        return self._prefills[sig]
+
+    def _decode_compiled(self):
+        if self._decode is None:
+            model, selector, C = self.model, self.selector, self.decode_chunk
+
+            def chunk(params, tok, cache, key):
+                def body(carry, k):
+                    tok, cache = carry
+                    logits, cache = model.decode(params, {"tokens": tok},
+                                                 cache)
+                    nxt = selector(logits, k)
+                    return (nxt, cache), nxt
+
+                keys = jax.random.split(key, C)
+                (_, cache), toks = jax.lax.scan(body, (tok, cache), keys)
+                return toks, cache           # toks: (C, B, 1) | (C, B, K, 1)
+
+            self._decode = self._compile(
+                chunk, (self.params, self.cur_tok, self.cache, self.key),
+                donate=(2,))
+        return self._decode
+
+    # -- the engine loop ----------------------------------------------
+    def _prefill_batch(self, req: Request):
+        batch = {"tokens": jnp.asarray(req.tokens)[None]}
+        if req.cond is not None:
+            batch["cond"] = jnp.asarray(req.cond)[None]
+        if req.patch_embeds is not None:
+            batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
+        return batch
+
+    def _admit(self):
+        while True:
+            pairs = self.sched.admissible()
+            if not pairs:
+                return
+            for slot, req in pairs:
+                batch = self._prefill_batch(req)
+                one_cache = self.model.init_cache(self.params, 1, self.max_len)
+                prefill = self._prefill_compiled(batch, one_cache)
+                t0 = time.perf_counter()
+                logits, one_cache = prefill(self.params, batch, one_cache)
+                self.key, k = jax.random.split(self.key)
+                first = self.selector(logits, k)      # (1, 1) | (1, K, 1)
+                first_host = np.asarray(first[0, ..., 0])
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                self.stats["prefill_tokens"] += req.prompt_len
+                self.cache = self.writer(self.cache, one_cache,
+                                         jnp.int32(slot))
+                self.cur_tok = self.cur_tok.at[slot].set(first[0])
+                self.sched.place(slot, req, first_host)
+                # a request finishing on its first token frees the slot
+                # again — the outer while loop re-runs admission
+
+    def step(self) -> None:
+        """One engine step: admit into free slots, then decode one chunk."""
+        self._admit()
+        if not self.sched.active_slots():
+            self.sched.step_count += 1        # idle tick: arrivals advance
+            return
+        decode = self._decode_compiled()
+        self.key, k = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        toks, self.cache = decode(self.params, self.cur_tok, self.cache, k)
+        self.cur_tok = toks[-1]
+        toks_host = np.asarray(toks[..., 0])  # blocks: (C, B) | (C, B, K)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += self.decode_chunk
+        self.stats["chunks"] += 1
+        emitted_before = self.sched.tokens_emitted
+        self.sched.absorb_chunk(toks_host)
+        self.stats["decode_tokens"] += self.sched.tokens_emitted - emitted_before
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {uid: emitted tokens (G,) | (K, G)}."""
+        steps = 0
+        while self.sched.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return self.sched.results()
+
+    # -- reporting ----------------------------------------------------
+    def throughput(self) -> Dict[str, float]:
+        """Tokens/s over KEPT tokens only — idle-slot rows and discarded
+        speculative post-termination tokens never count."""
+        s = self.stats
+        return {
+            "compile_s": round(s["compile_s"], 3),
+            "prefill_tokens_per_s": round(
+                s["prefill_tokens"] / max(s["prefill_s"], 1e-9), 1),
+            "decode_tokens_per_s": round(
+                s["decode_tokens"] / max(s["decode_s"], 1e-9), 1),
+        }

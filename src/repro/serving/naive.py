@@ -1,0 +1,49 @@
+"""The (fixed) naive generation loop — the engine's exact-match oracle
+and the benchmark baseline.
+
+Fixes over the old ``launch/serve.py`` loop, which threw away the
+prefill logits and re-fed the last PROMPT token through decode:
+
+* the first generated token is selected from the prefill logits
+  (``logits[:, -1]``) — no wasted decode step;
+* the KV cache advances by exactly 1 per decode, so after prefill(T)
+  plus G decode steps ``cache_positions(cache) == T + G`` (the old loop
+  wrote the last prompt token twice, shifting every later position).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.model import build_model
+from repro.serving.sampling import SamplingParams, make_token_selector
+
+
+def make_naive_fns(cfg, sampling: SamplingParams = SamplingParams()):
+    """Returns (prefill_j, decode_j, selector) — jitted once, reused
+    across calls so timing loops can warm up explicitly."""
+    model = build_model(cfg)
+    selector = make_token_selector(cfg, sampling)
+    return jax.jit(model.prefill), jax.jit(model.decode), selector
+
+
+def naive_generate(fns, params, batch, cache, gen: int, key=None):
+    """One batch of SAME-LENGTH prompts, ``gen`` greedy/sampled tokens.
+
+    Emits ``gen`` tokens per row: token 1 from the prefill logits,
+    tokens 2..gen from ``gen - 1`` decode steps.  Returns
+    (tokens (B, gen) | (B, K, gen), final cache).
+    """
+    prefill_j, decode_j, selector = fns
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    logits, cache = prefill_j(params, batch, cache)
+    key, k = jax.random.split(key)
+    tok = selector(logits, k)                    # (B, 1) or (B, K, 1)
+    out = [tok]
+    for _ in range(gen - 1):
+        logits, cache = decode_j(params, {"tokens": tok}, cache)
+        key, k = jax.random.split(key)
+        tok = selector(logits, k)
+        out.append(tok)
+    import jax.numpy as jnp
+    return jnp.concatenate(out, axis=-1), cache

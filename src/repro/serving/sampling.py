@@ -1,0 +1,46 @@
+"""Token selection: greedy (temperature 0) / temperature / top-k.
+
+One code path for the engine's fused decode chunk, the naive reference
+loop, and the first token taken from the PREFILL logits — so the
+first-token fix and the engine stay bit-identical under greedy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 -> greedy argmax
+    top_k: int = 0               # 0 -> no truncation
+
+
+def select_tokens(logits, key, sp: SamplingParams):
+    """logits: (..., V) -> (...) int32 token ids."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def make_token_selector(cfg, sp: SamplingParams):
+    """(logits, key) -> next decode input tokens.
+
+    Handles the family shapes uniformly: logits (B, T, V) -> (B, 1)
+    for text families; (B, T, K, V) -> (B, K, 1) for audio streams.
+    Only the LAST time step's logits are consumed — for prefill logits
+    that is exactly the next-token distribution the naive loop used to
+    throw away.
+    """
+    def next_tokens(logits, key):
+        last = logits[:, -1]                     # (B, V) or (B, K, V)
+        return select_tokens(last, key, sp)[..., None]
+    return next_tokens

@@ -1,0 +1,112 @@
+"""Slot-based scheduler for the continuous-batching engine.
+
+A fixed-size decode batch of ``num_slots`` rows; requests are admitted
+FIFO into free slots (respecting their ``arrival`` step) and evicted
+when they terminate — EOS or max-new-tokens — so the slot is reused by
+the next queued request.  Pure host-side bookkeeping: no jax, fully
+unit-testable without a model.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.request import Request, SlotRecord
+
+
+class Scheduler:
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.slots: List[Optional[SlotRecord]] = [None] * num_slots
+        self.queue: deque[Request] = deque()
+        self.step_count = 0                       # decode chunks elapsed
+        self.finished: Dict[int, SlotRecord] = {} # uid -> record
+        self.tokens_emitted = 0                   # KEPT tokens (audio: xK);
+                                                  # discarded speculative
+                                                  # post-EOS tokens excluded
+
+    # -- admission ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admissible(self) -> List[Tuple[int, Request]]:
+        """Pair each free slot with the next arrived queued request.
+        Pops the requests; the caller MUST follow up with ``place``."""
+        pairs = []
+        for i in self.free_slots():
+            req = self._pop_arrived()
+            if req is None:
+                break
+            pairs.append((i, req))
+        return pairs
+
+    def _pop_arrived(self) -> Optional[Request]:
+        for j, req in enumerate(self.queue):
+            if req.arrival <= self.step_count:
+                del self.queue[j]
+                return req
+        return None
+
+    def place(self, slot: int, req: Request, first_token) -> bool:
+        """Occupy ``slot`` with ``req`` whose first token (from the
+        PREFILL logits) is ``first_token``.  Returns True if the request
+        already terminated (single-token budget or immediate EOS)."""
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        rec = SlotRecord(request=req)
+        self.slots[slot] = rec
+        if self._append(rec, first_token):
+            self._evict(slot)
+            return True
+        return False
+
+    # -- termination --------------------------------------------------
+    def _append(self, rec: SlotRecord, token) -> bool:
+        tok = np.asarray(token, np.int32)
+        rec.emitted.append(tok.reshape(-1) if tok.ndim else tok)
+        self.tokens_emitted += int(tok.size)
+        req = rec.request
+        if req.eos_id is not None and bool(np.all(tok == req.eos_id)):
+            rec.done = True
+        if len(rec.emitted) >= req.max_new_tokens:
+            rec.done = True
+        return rec.done
+
+    def _evict(self, slot: int) -> None:
+        rec = self.slots[slot]
+        self.finished[rec.request.uid] = rec
+        self.slots[slot] = None
+
+    def absorb_chunk(self, chunk_tokens: np.ndarray) -> List[int]:
+        """Feed one decode chunk's tokens — (C, B) or (C, B, K) — to the
+        occupied slots.  A slot that terminates at step j ignores the
+        chunk's remaining steps (those tokens were decoded speculatively
+        past EOS and are discarded).  Returns the freed slot indices."""
+        freed = []
+        active = [(i, rec) for i, rec in enumerate(self.slots)
+                  if rec is not None]
+        for i, rec in active:
+            for c in range(chunk_tokens.shape[0]):
+                if self._append(rec, chunk_tokens[c, i]):
+                    break
+            if rec.done:
+                self._evict(i)
+                freed.append(i)
+        self.step_count += 1
+        return freed
+
+    # -- state --------------------------------------------------------
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active_slots())
+
+    def results(self) -> Dict[int, np.ndarray]:
+        return {uid: rec.tokens() for uid, rec in self.finished.items()}

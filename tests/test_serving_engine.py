@@ -1,0 +1,234 @@
+"""The serving subsystem: first-token/off-by-one regression, the
+continuous-batching engine's exact-match contract against the naive
+loop, scheduler slot reuse under staggered arrivals, and sampling.
+
+Tier-1 runs the dense-family paths; the other families ride the slow
+lane (and the CI serving lane, which runs this file with the tier-1
+filter overridden).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CONFIGS, family_params
+from repro.models.model import build_model, cache_positions
+from repro.serving import (Engine, Request, SamplingParams, Scheduler,
+                           make_naive_fns, naive_generate)
+
+GEN = 8
+MAX_LEN = 32
+MIXED_LENS = (5, 9, 12, 7)
+
+_PARAMS = {}
+
+
+def _params(cfg, key):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = build_model(cfg).init(key)
+    return _PARAMS[cfg.name]
+
+
+def _request(cfg, key, i, T):
+    kk = jax.random.fold_in(key, 1000 + i)
+    shape = (cfg.num_codebooks, T) if cfg.family == "audio" else (T,)
+    req = {"tokens": np.asarray(
+        jax.random.randint(kk, shape, 0, cfg.vocab_size), np.int32)}
+    if cfg.family == "vlm":
+        req["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(kk, 1), (cfg.num_patches, cfg.d_model))
+    if cfg.family == "audio":
+        req["cond"] = jax.random.normal(
+            jax.random.fold_in(kk, 2), (cfg.cond_len, cfg.d_model))
+    return req
+
+
+def _naive_reference(cfg, params, reqs, gen=GEN):
+    fns = make_naive_fns(cfg)
+    model = build_model(cfg)
+    outs = []
+    for r in reqs:
+        batch = {k: jnp.asarray(v)[None] for k, v in r.items()}
+        cache = model.init_cache(params, 1, MAX_LEN)
+        toks, _ = naive_generate(fns, params, batch, cache, gen)
+        outs.append(np.asarray(toks[0]))
+    return outs
+
+
+# ------------------------------------------------------------------
+# [bugfix] first token from prefill logits + exact cache positions
+# ------------------------------------------------------------------
+
+def test_first_token_is_prefill_argmax(key):
+    """The first emitted token must be argmax over the PREFILL logits'
+    last position — not the last prompt token re-fed through decode."""
+    cfg = FAMILY_CONFIGS["dense"]
+    model = build_model(cfg)
+    params = _params(cfg, key)
+    T = 12
+    batch = {"tokens": jax.random.randint(key, (2, T), 0, cfg.vocab_size)}
+    logits, _ = model.prefill(params, batch,
+                              model.init_cache(params, 2, MAX_LEN))
+    expected_first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+    fns = make_naive_fns(cfg)
+    toks, cache = naive_generate(fns, params, batch,
+                                 model.init_cache(params, 2, MAX_LEN), GEN)
+    np.testing.assert_array_equal(np.asarray(toks)[:, 0], expected_first)
+    # G emitted tokens = prefill + (G-1) decodes: no double-fed prompt token
+    assert int(np.asarray(cache_positions(cache))[()]) == T + GEN - 1
+
+
+def test_cache_positions_advance_exactly(key):
+    """prefill(T) + G decode steps -> cache position T + G exactly (the
+    old loop wrote the last prompt token twice)."""
+    cfg = FAMILY_CONFIGS["dense"]
+    model = build_model(cfg)
+    params = _params(cfg, key)
+    T = 10
+    batch = {"tokens": jax.random.randint(key, (2, T), 0, cfg.vocab_size)}
+    cache = model.init_cache(params, 2, MAX_LEN)
+    logits, cache = model.prefill(params, batch, cache)
+    assert int(np.asarray(cache_positions(cache))[()]) == T
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for g in range(1, GEN + 1):
+        logits, cache = model.decode(params, {"tokens": tok}, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        assert int(np.asarray(cache_positions(cache))[()]) == T + g
+
+
+# ------------------------------------------------------------------
+# [test] engine vs naive: bit-identical greedy tokens, mixed lengths
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", family_params())
+def test_engine_matches_naive_exactly(family, key):
+    cfg = FAMILY_CONFIGS[family]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    naive = _naive_reference(cfg, params, reqs)
+
+    # fewer slots than requests: slots are reused as sequences finish
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=3)
+    for r in reqs:
+        eng.submit(r["tokens"], max_new_tokens=GEN, cond=r.get("cond"),
+                   patch_embeds=r.get("patch_embeds"))
+    res = eng.run()
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(res[i], naive[i], err_msg=f"req {i}")
+
+
+def test_engine_eos_truncation_matches_naive(key):
+    """EOS termination: the engine's output equals the naive sequence
+    cut at the first EOS (speculative post-EOS chunk tokens dropped)."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    naive = _naive_reference(cfg, params, reqs)
+    # pick an EOS id that actually occurs mid-sequence in request 0
+    eos = int(naive[0][GEN // 2])
+
+    def truncate(seq):
+        hits = np.flatnonzero(seq == eos)
+        return seq[:hits[0] + 1] if hits.size else seq
+
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=3)
+    for r in reqs:
+        eng.submit(r["tokens"], max_new_tokens=GEN, eos_id=eos)
+    res = eng.run()
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(res[i], truncate(naive[i]),
+                                      err_msg=f"req {i}")
+
+
+def test_engine_staggered_arrivals_match(key):
+    """Requests arriving over time (continuous batching, not one static
+    batch) still produce the exact naive tokens."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    naive = _naive_reference(cfg, params, reqs)
+
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=3)
+    for i, r in enumerate(reqs):
+        eng.submit(r["tokens"], max_new_tokens=GEN, arrival=i)
+    res = eng.run()
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(res[i], naive[i], err_msg=f"req {i}")
+
+
+# ------------------------------------------------------------------
+# [test] scheduler unit: staggered arrivals, slot reuse after EOS
+# ------------------------------------------------------------------
+
+def test_scheduler_slot_reuse_after_eos():
+    s = Scheduler(2)
+    s.submit(Request(uid=0, tokens=np.arange(4), max_new_tokens=3))
+    s.submit(Request(uid=1, tokens=np.arange(5), max_new_tokens=8, eos_id=7))
+    s.submit(Request(uid=2, tokens=np.arange(3), max_new_tokens=2, arrival=2))
+
+    pairs = s.admissible()
+    assert [(i, r.uid) for i, r in pairs] == [(0, 0), (1, 1)]
+    assert not s.place(0, pairs[0][1], 10)
+    assert not s.place(1, pairs[1][1], 11)
+    assert s.admissible() == []          # uid 2 hasn't arrived yet
+
+    # chunk of 3 steps: uid0 hits max_new at step 2, uid1 hits EOS (7)
+    freed = s.absorb_chunk(np.array([[1, 2], [2, 7], [3, 8]]))
+    assert sorted(freed) == [0, 1]
+    assert s.active_slots() == []
+    assert s.finished[0].tokens().tolist() == [10, 1, 2]     # max-len stop
+    assert s.finished[1].tokens().tolist() == [11, 2, 7]     # EOS stop
+
+    # uid 2 arrives at step 2: not admissible at step 1, then reuses slot 0
+    assert s.step_count == 1 and s.admissible() == []
+    s.absorb_chunk(np.zeros((1, 2), np.int32))               # idle tick
+    pairs = s.admissible()
+    assert [(i, r.uid) for i, r in pairs] == [(0, 2)]
+    assert not s.place(0, pairs[0][1], 20)
+    s.absorb_chunk(np.array([[21, 0]]))
+    assert s.finished[2].tokens().tolist() == [20, 21]
+    assert not s.has_work()
+
+
+def test_scheduler_single_token_budget():
+    """max_new_tokens=1 finishes at placement — the slot frees instantly."""
+    s = Scheduler(1)
+    s.submit(Request(uid=0, tokens=np.arange(4), max_new_tokens=1))
+    (slot, req), = s.admissible()
+    assert s.place(slot, req, 5)
+    assert s.free_slots() == [0]
+    assert s.finished[0].tokens().tolist() == [5]
+
+
+# ------------------------------------------------------------------
+# sampling
+# ------------------------------------------------------------------
+
+def test_sampling_topk1_equals_greedy(key):
+    """top_k=1 with any temperature collapses to the greedy argmax."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS[:2])]
+    naive = _naive_reference(cfg, params, reqs)
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=3,
+                 sampling=SamplingParams(temperature=0.8, top_k=1))
+    for r in reqs:
+        eng.submit(r["tokens"], max_new_tokens=GEN)
+    res = eng.run()
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(res[i], naive[i])
+
+
+def test_sampling_temperature_valid_tokens(key):
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS[:2])]
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=3,
+                 sampling=SamplingParams(temperature=1.0, top_k=8), seed=3)
+    for r in reqs:
+        eng.submit(r["tokens"], max_new_tokens=GEN)
+    res = eng.run()
+    for i in range(len(reqs)):
+        assert res[i].shape == (GEN,)
+        assert (res[i] >= 0).all() and (res[i] < cfg.vocab_size).all()
