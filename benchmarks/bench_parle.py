@@ -1,12 +1,26 @@
 """Seed/refresh ``benchmarks/BENCH_parle.json`` — the tracked perf
-trajectory of the Parle hot path on a PINNED smoke config:
+trajectory of the Parle hot path on a PINNED smoke config.
 
-  * ``inner_step_us``  — one Eq. (8a-8b) step (vmap'd replicas, jitted),
-  * ``sync_step_us``   — one Eq. (8c-8d) sync (the per-L step),
-  * ``fused_step_us``  — the production fused step (cond'd sync),
-  * per-axis collective bytes of the composed-mesh compiled step
-    (``replica:2,data:2,model:2`` via a subprocess so the forced
-    8-device host platform never leaks into this process).
+Timing discipline (PR 4): every program is AOT-compiled
+(``jit().lower().compile()``) so compile time never leaks into a timed
+window, warmed up, and every timed window ends in ``block_until_ready``;
+compile time is reported as its own field.
+
+Fields:
+  * ``inner_step_us`` / ``sync_step_us`` / ``fused_step_us`` — one
+    compiled call of each program (pre-staged batch).
+  * ``step_loop_us`` / ``step_loop_steps_per_s`` — the per-step dispatch
+    loop AS THE DRIVER RUNS IT: per-step host-side batch construction
+    (~20 un-jitted ops) + one compiled step per step.
+  * ``round_us`` / ``steps_per_s`` — the fused L-step round: one
+    donated-buffer compiled program per L steps, batches staged by one
+    jitted dispatch, double-buffered.  ``round_speedup`` =
+    steps_per_s / step_loop_steps_per_s (acceptance: >= 1.5x).
+  * ``compile_s`` — AOT compile seconds per program.
+  * per-axis collective bytes of the composed-mesh compiled step and
+    ``sync_compress_bytes`` — the replica-axis sync payload at
+    none/bf16/int8 (subprocesses, so the forced host device counts
+    never leak into this process).
 
   PYTHONPATH=src python benchmarks/bench_parle.py          # write JSON
   PYTHONPATH=src python -m benchmarks.run parle            # suite line
@@ -25,10 +39,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_parle.json")
 
-# the pinned smoke config: small enough for CI CPUs, big enough that the
-# update streams dominate python dispatch
-PIN = {"d_model": 128, "num_layers": 2, "d_ff": 256, "vocab": 512,
-       "seq": 32, "batch": 2, "n_replicas": 2, "L": 3,
+# the pinned smoke config (v2, this PR): sized so that per-step
+# DISPATCH/staging overhead — what fused rounds eliminate — is a large
+# fraction of the step, not hidden under CI-CPU matmul time (the v1
+# pin's d_model=128/seq=32/batch=2 model spent ~20 ms/step in compute
+# identical on both paths, capping any honest loop-vs-round ratio at
+# ~1.3x; v1 numbers live in git history).  The mesh/param_size comm
+# probe is unchanged, so the per-axis byte fields stay comparable.
+PIN = {"d_model": 64, "num_layers": 2, "d_ff": 128, "vocab": 512,
+       "seq": 16, "batch": 1, "n_replicas": 2, "L": 5,
        "mesh": "replica:2,data:2,model:2", "param_size": 1 << 20}
 
 
@@ -44,21 +63,31 @@ def _time_us(fn, *args, warmup=2, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _aot(jitted, *args):
+    """AOT-compile; returns (compiled, compile_seconds)."""
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args).compile()
+    return compiled, time.perf_counter() - t0
+
+
 def measure_steps() -> dict:
     import jax
 
     from repro.configs.base import ModelConfig, ParleConfig
-    from repro.data.synthetic import TokenStream, replica_batches
+    from repro.core import registry
+    from repro.core.parle import dealias_state
+    from repro.data.synthetic import (TokenStream, make_round_batch_fn,
+                                      replica_batches)
     from repro.launch import steps as steps_lib
+    from repro.models.model import build_model
 
     mcfg = ModelConfig(name="bench-dense", family="dense",
                        num_layers=PIN["num_layers"], d_model=PIN["d_model"],
                        num_heads=4, num_kv_heads=2, d_ff=PIN["d_ff"],
-                       vocab_size=PIN["vocab"], head_dim=32)
+                       vocab_size=PIN["vocab"],
+                       head_dim=PIN["d_model"] // 4)
     pcfg = ParleConfig(n_replicas=PIN["n_replicas"], L=PIN["L"],
                        batches_per_epoch=5)
-    from repro.core import registry
-    from repro.models.model import build_model
     algo = registry.get("parle")
     model = build_model(mcfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -66,15 +95,73 @@ def measure_steps() -> dict:
     stream = TokenStream(vocab_size=mcfg.vocab_size, seq_len=PIN["seq"],
                          batch_size=PIN["batch"], seed=0)
     batch = replica_batches(stream, 0, PIN["batch"], PIN["n_replicas"])
+    L, n = PIN["L"], PIN["n_replicas"]
 
+    compile_s = {}
     inner, sync, fused = steps_lib.make_parle_steps(mcfg, pcfg)
-    inner_j, sync_j = jax.jit(inner), jax.jit(sync)
-    fused_j = jax.jit(algo.make_step(model.loss, pcfg))
-    return {
-        "inner_step_us": round(_time_us(inner_j, state, batch), 1),
-        "sync_step_us": round(_time_us(sync_j, state), 1),
-        "fused_step_us": round(_time_us(fused_j, state, batch), 1),
+    inner_c, compile_s["inner"] = _aot(jax.jit(inner), state, batch)
+    sync_c, compile_s["sync"] = _aot(jax.jit(sync), state)
+    step_c, compile_s["fused"] = _aot(
+        jax.jit(algo.make_step(model.loss, pcfg)), state, batch)
+    out = {
+        "inner_step_us": round(_time_us(inner_c, state, batch), 1),
+        "sync_step_us": round(_time_us(sync_c, state), 1),
+        "fused_step_us": round(_time_us(step_c, state, batch), 1),
     }
+
+    # --- per-step dispatch loop, as launch/train.py runs it without
+    # --round-fused: per-step host batch construction + jit-dispatched
+    # step (the driver calls jax.jit(step), not an AOT handle)
+    step_j = jax.jit(algo.make_step(model.loss, pcfg))
+
+    def loop_trial(s, k, start):
+        t0 = time.perf_counter()
+        for i in range(start, start + k):
+            b = replica_batches(stream, i, PIN["batch"], n)
+            s, _m = step_j(s, b)
+        jax.block_until_ready(s)
+        return s, (time.perf_counter() - t0) / k * 1e6
+
+    # --- fused round: donated state, one jitted staging dispatch per
+    # round, double-buffered against the round's compute
+    round_j = algo.make_round_fn(model.loss, pcfg)
+    stage = make_round_batch_fn(stream, L, PIN["batch"], n)
+    rb0 = stage(0)
+    round_c, compile_s["round"] = _aot(round_j, state, rb0)
+
+    def round_trial(rs, k, start_round):
+        nxt = stage(start_round * L)
+        jax.block_until_ready(nxt)
+        t0 = time.perf_counter()
+        for r in range(start_round, start_round + k):
+            cur, nxt = nxt, None
+            rs, m = round_c(rs, cur)
+            nxt = stage((r + 1) * L)
+        jax.block_until_ready(m)
+        return rs, nxt, (time.perf_counter() - t0) / (k * L) * 1e6
+
+    # warmup both paths (jit trace + sync-cond branch + donation chain)
+    s, _ = loop_trial(state, 2 * L, 0)
+    rs = dealias_state(state)
+    rs, nxt, _ = round_trial(rs, 2, 0)
+    # interleave trials so machine-load noise hits both paths equally;
+    # per-path MIN is the least-noise throughput estimate
+    loop_us, round_us = [], []
+    for trial in range(3):
+        s, us = loop_trial(s, 8 * L, (2 + trial * 8) * L)
+        loop_us.append(us)
+        rs, nxt, us = round_trial(rs, 8, 2 + (trial + 1) * 8)
+        round_us.append(us)
+    out["step_loop_us"] = round(min(loop_us), 1)
+    out["step_loop_us_trials"] = [round(u, 1) for u in loop_us]
+    out["step_loop_steps_per_s"] = round(1e6 / min(loop_us), 2)
+    out["round_us"] = round(min(round_us) * L, 1)
+    out["round_us_trials"] = [round(u * L, 1) for u in round_us]
+    out["steps_per_s"] = round(1e6 / min(round_us), 2)
+    out["round_speedup"] = round(out["steps_per_s"]
+                                 / out["step_loop_steps_per_s"], 2)
+    out["compile_s"] = {k: round(v, 2) for k, v in compile_s.items()}
+    return out
 
 
 def measure_comm() -> dict:
@@ -106,17 +193,73 @@ def measure_comm() -> dict:
     }
 
 
+_COMPRESS_CHILD = r"""
+import json, jax, jax.numpy as jnp
+from repro.configs.base import ParleConfig
+from repro.core import parle
+from repro.launch.mesh import make_mesh_from_spec
+from repro.launch import hlo_stats
+
+def loss(p, b):
+    return 0.5 * jnp.sum((p["w"] - b["t"]) ** 2), ()
+
+size = %d // 4
+mesh = make_mesh_from_spec("replica:2")
+batch = {"t": jnp.zeros((2, 1), jnp.float32)}
+out = {}
+for method in ("none", "bf16", "int8"):
+    cfg = ParleConfig(n_replicas=2, L=%d, batches_per_epoch=10,
+                      sync_compress=method)
+    st = parle.init({"w": jnp.zeros((size,), jnp.float32)}, cfg)
+    step = parle.make_sharded_train_step(loss, cfg, mesh)
+    txt = step.lower(st, batch).compile().as_text()
+    stats = hlo_stats.collective_bytes_by_axis(txt, dict(mesh.shape))
+    out[method] = sum(stats["by_axis"]["replica"].values()) - 4
+print("COMPRESS_BYTES " + json.dumps(out))
+"""
+
+
+def measure_compress() -> dict:
+    """Replica-axis sync payload bytes per device at each
+    --sync-compress setting, from compiled HLO (child process: 2 forced
+    host devices, 1 MiB f32 model)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-c",
+         _COMPRESS_CHILD % (PIN["param_size"], PIN["L"])],
+        capture_output=True, text=True, timeout=900, env=env)
+    if res.returncode != 0:
+        raise RuntimeError(res.stdout + res.stderr)
+    row = next(l for l in res.stdout.splitlines()
+               if l.startswith("COMPRESS_BYTES"))
+    bytes_by_method = json.loads(row.split(" ", 1)[1])
+    base = bytes_by_method["none"]
+    return {"sync_compress_bytes": bytes_by_method,
+            "sync_compress_ratio": {
+                k: round(v / base, 4) for k, v in bytes_by_method.items()}}
+
+
 def main(out_path: str = OUT_PATH):
     rec = {"pinned_config": PIN}
     rec.update(measure_steps())
     rec.update(measure_comm())
+    rec.update(measure_compress())
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")
     # benchmark-suite CSV contract: name,us_per_call,derived
-    print(f"bench_parle_inner,{rec['inner_step_us']},"
-          f"sync_us={rec['sync_step_us']};fused_us={rec['fused_step_us']};"
+    print(f"bench_parle_round,{rec['round_us']},"
+          f"steps_per_s={rec['steps_per_s']};"
+          f"step_loop_steps_per_s={rec['step_loop_steps_per_s']};"
+          f"round_speedup={rec['round_speedup']};"
+          f"fused_us={rec['fused_step_us']};"
           f"sync_ar_bytes={rec['sync_all_reduce_bytes_per_device']};"
+          f"int8_sync_bytes={rec['sync_compress_bytes']['int8']};"
           f"out={os.path.relpath(out_path)}")
     return rec
 

@@ -24,7 +24,13 @@ def _flatten_with_paths(tree):
     out = {}
     for path, leaf in flat:
         key = SEP.join(_path_str(p) for p in path)
-        out[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        # npz cannot round-trip ml_dtypes custom dtypes (bf16 degrades
+        # to a void V2 blob): store the raw bits as uint16; restore()
+        # views them back using the target structure's dtype
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        out[key] = arr
     return out, treedef
 
 
@@ -80,18 +86,28 @@ def restore(path: str, like: Any, algo: str | None = None) -> Any:
                 f"refusing to restore it as {algo!r}")
     data = np.load(path)
     flat_like, treedef = _flatten_with_paths(like)
-    leaves = []
     for key in flat_like:
         if key not in data:
             raise KeyError(f"checkpoint missing key {key}")
-        leaves.append(jnp.asarray(data[key]))
-    # rebuild in like's leaf order
+    # rebuild in like's leaf order; bf16 leaves were stored as their
+    # uint16 bit pattern (np.savez has no bf16) — view them back per the
+    # target leaf's dtype, bit-exactly
     flat_paths, _ = jax.tree_util.tree_flatten_with_path(like)
-    keyed = {SEP.join(_path_str(p) for p in path): i
-             for i, (path, _) in enumerate(flat_paths)}
-    ordered = [None] * len(leaves)
-    for key, i in keyed.items():
-        ordered[i] = jnp.asarray(data[key])
+    ordered = [None] * len(flat_paths)
+    for i, (path, leaf) in enumerate(flat_paths):
+        key = SEP.join(_path_str(p) for p in path)
+        arr = data[key]
+        like_dtype = np.dtype(getattr(leaf, "dtype", type(leaf)))
+        if arr.dtype == np.uint16 and like_dtype != np.uint16:
+            # uint16 on disk = bf16 bit pattern (see _flatten_with_paths)
+            if like_dtype != jnp.bfloat16:
+                raise ValueError(
+                    f"checkpoint leaf {key!r} was saved as bfloat16 bits "
+                    f"but the restore template expects {like_dtype}; "
+                    "restore with a matching-precision state (e.g. "
+                    "--precision bf16)")
+            arr = arr.view(jnp.bfloat16)
+        ordered[i] = jnp.asarray(arr)
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
 
 

@@ -167,9 +167,29 @@ class ParleConfig:
     # (core/algorithm.py), so the same schedule drives all four.
     lr_drop_steps: Tuple[int, ...] = ()
     lr_drop_factor: float = 0.2
+    # Mixed precision of the training hot path: "f32" keeps everything
+    # float32; "bf16" stores the inner iterate y (and hence activations
+    # and grads) in bfloat16 while x, z and both momenta stay f32
+    # masters — the Parle layout of the classic mixed-precision scheme
+    # (elastic_sgd/sgd cast their compute params to bf16 per step).
+    precision: str = "f32"
+    # Compression of the Eq. (8d) sync collective: "none" ships raw f32,
+    # "bf16" halves the payload, "int8" quarters it (per-1024-chunk
+    # scales + an error-feedback residual carried in ParleState.e so the
+    # quantization error telescopes away over repeated syncs).  Honored
+    # by parle/entropy_sgd (the per-L sync); elastic_sgd/sgd ignore it.
+    sync_compress: str = "none"
 
     def scoping_factor(self) -> float:
         return 1.0 - 1.0 / (2.0 * self.batches_per_epoch)
+
+    def compute_dtype(self):
+        import jax.numpy as jnp
+        if self.precision == "bf16":
+            return jnp.bfloat16
+        if self.precision == "f32":
+            return jnp.float32
+        raise ValueError(f"unknown precision {self.precision!r}")
 
 
 @dataclass(frozen=True)

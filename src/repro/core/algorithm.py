@@ -19,13 +19,28 @@ registered object (see :mod:`repro.core.registry`) exposing
                                 "data"/"model" axes run FSDP x TP from
                                 the sharding planner under the SAME
                                 shard_map (replica manual, rest auto)
-  state_pspecs(replica_axis, params=None, mesh=None)
+  make_round_fn(loss_fn, cfg, *, mesh=None, ...)
+                             -> round(state, batches) -> (state, metrics):
+                                one compiled, state-DONATING program per
+                                L = cfg.L steps (lax.scan over the inner
+                                steps, the sync at the end for Parle);
+                                batches leaves are (L, n, B, ...) and
+                                the state's step counter must be a
+                                multiple of L on entry.  metrics carry
+                                the round-mean "loss" + per-step
+                                "losses" (L,).  With a mesh, replica-
+                                sharded like make_sharded_step (see the
+                                per-module docstrings for the jax
+                                0.4.37 composed-mesh scan workaround)
+  state_pspecs(replica_axis, params=None, mesh=None, cfg=None)
                              -> PartitionSpec tree for State: the
                                 replica-axis prefix form without
                                 ``params``; with ``params`` the
                                 planner-composed per-leaf form
                                 ``P(replica, *plan(leaf))`` (what
-                                device_put / checkpoint restore use)
+                                device_put / checkpoint restore use).
+                                ``cfg`` shapes feature-dependent leaves
+                                (the compressed-sync residual ``e``)
   deployable(state)          -> the single servable model pytree
   diagnostics(state)         -> dict of host-side floats (overlap /
                                 spread where a replica axis exists)
@@ -69,7 +84,13 @@ class Algorithm(Protocol):
                           weight_decay: float = 0.0,
                           use_kernel: bool = False, lr_schedule=None): ...
 
-    def state_pspecs(self, replica_axis: str, params=None, mesh=None): ...
+    def make_round_fn(self, loss_fn: Callable, cfg, *, mesh=None,
+                      replica_axis: str = "replica",
+                      weight_decay: float = 0.0, use_kernel: bool = False,
+                      lr_schedule=None): ...
+
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None,
+                     cfg=None): ...
 
     def deployable(self, state): ...
 
@@ -122,9 +143,24 @@ class ParleAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
+    def make_round_fn(self, loss_fn, cfg, *, mesh=None,
+                      replica_axis="replica", weight_decay=0.0,
+                      use_kernel=False, lr_schedule=None):
+        sched = resolve_lr_schedule(cfg, lr_schedule)
+        if mesh is None:
+            return parle.make_round_fn(
+                loss_fn, cfg, weight_decay=weight_decay,
+                use_kernel=use_kernel, lr_schedule=sched)
+        return parle.make_sharded_round_fn(
+            loss_fn, cfg, mesh, replica_axis=replica_axis,
+            weight_decay=weight_decay, use_kernel=use_kernel,
+            lr_schedule=sched)
+
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None,
+                     cfg=None):
         from repro.sharding.partition import parle_state_pspecs
-        return parle_state_pspecs(replica_axis, params=params, mesh=mesh)
+        return parle_state_pspecs(replica_axis, params=params, mesh=mesh,
+                                  cfg=cfg)
 
     def deployable(self, state):
         return parle.average_model(state)
@@ -152,6 +188,10 @@ class EntropySGDAlgorithm(ParleAlgorithm):
 
     def make_step(self, loss_fn, cfg, **kw):
         return super().make_step(loss_fn, self.canonicalize_cfg(cfg), **kw)
+
+    def make_round_fn(self, loss_fn, cfg, **kw):
+        return super().make_round_fn(loss_fn, self.canonicalize_cfg(cfg),
+                                     **kw)
 
     def make_sharded_step(self, loss_fn, cfg, mesh, replica_axis="replica",
                           **kw):
@@ -193,8 +233,23 @@ class ElasticSGDAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
+    def make_round_fn(self, loss_fn, cfg, *, mesh=None,
+                      replica_axis="replica", weight_decay=0.0,
+                      use_kernel=False, lr_schedule=None):
+        sched = resolve_lr_schedule(cfg, lr_schedule)
+        if mesh is None:
+            return elastic_sgd.make_round_fn(
+                loss_fn, cfg, weight_decay=weight_decay,
+                use_kernel=use_kernel, lr_schedule=sched)
+        return elastic_sgd.make_sharded_round_fn(
+            loss_fn, cfg, mesh, replica_axis=replica_axis,
+            weight_decay=weight_decay, use_kernel=use_kernel,
+            lr_schedule=sched)
+
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None,
+                     cfg=None):
         from repro.sharding.partition import elastic_state_pspecs
+        del cfg                 # no feature-dependent leaves
         return elastic_state_pspecs(replica_axis, params=params, mesh=mesh)
 
     def deployable(self, state):
@@ -236,10 +291,24 @@ class SGDAlgorithm:
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=resolve_lr_schedule(cfg, lr_schedule))
 
-    def state_pspecs(self, replica_axis: str, params=None, mesh=None):
+    def make_round_fn(self, loss_fn, cfg, *, mesh=None,
+                      replica_axis="replica", weight_decay=0.0,
+                      use_kernel=False, lr_schedule=None):
+        del use_kernel      # XLA already fuses the single update stream
+        sched = resolve_lr_schedule(cfg, lr_schedule)
+        if mesh is None:
+            return sgd.make_round_fn(loss_fn, cfg,
+                                     weight_decay=weight_decay,
+                                     lr_schedule=sched)
+        return sgd.make_sharded_round_fn(
+            loss_fn, cfg, mesh, replica_axis=replica_axis,
+            weight_decay=weight_decay, lr_schedule=sched)
+
+    def state_pspecs(self, replica_axis: str, params=None, mesh=None,
+                     cfg=None):
         from repro.sharding.partition import sgd_state_pspecs
-        del replica_axis    # one replicated model; nothing rides the axis
-        return sgd_state_pspecs(params=params, mesh=mesh)
+        del replica_axis, cfg   # one replicated model; nothing rides the
+        return sgd_state_pspecs(params=params, mesh=mesh)   # axis
 
     def deployable(self, state):
         return state.params

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scoping import Scopes, init_scopes, update_scopes
-from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
-                                tree_unzip, tree_zeros_like)
+from repro.utils.pytree import (compute_cast, tree_broadcast_axis0,
+                                tree_mean_axis0, tree_unzip,
+                                tree_zeros_like)
 
 
 class ElasticState(NamedTuple):
@@ -65,7 +66,9 @@ def update(state: ElasticState, grads, cfg, axis_name: str | None = None,
             inv_rho=inv_rho, lr=lr, mu=mu, shard_ctx=shard_ctx)
     else:
         def upd(x, v, g, r):
-            g_e = g + inv_rho * (x - r[None])
+            # g may be the bf16 compute grad (cfg.precision) — accumulate
+            # in f32; x/v/ref are f32 masters
+            g_e = g.astype(jnp.float32) + inv_rho * (x - r[None])
             v_new = mu * v + g_e
             return x - lr * (g_e + mu * v_new), v_new
 
@@ -90,14 +93,18 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                     use_kernel: bool, axis_name: str | None,
                     lr_schedule=None, shard_ctx=None):
     """Shared body of the local and sharded train steps (cf.
-    parle._make_step_body)."""
+    parle._make_step_body — including its per-replica-loss metric-key
+    contract: under ``axis_name`` the vector metric holds only the
+    LOCAL replicas and is emitted as ``local_loss_per_replica``; the
+    shard_map wrapper reassembles and republishes the global vector)."""
 
     def replica_grad(params, batch):
         (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return loss, g
 
     def step(state: ElasticState, batch):
-        losses, grads = jax.vmap(replica_grad)(state.x, batch)
+        losses, grads = jax.vmap(replica_grad)(compute_cast(state.x, cfg),
+                                               batch)
         if weight_decay:
             grads = jax.tree.map(lambda g, p: g + weight_decay * p,
                                  grads, state.x)
@@ -106,10 +113,12 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                            use_kernel=use_kernel, lr_scale=lr_scale,
                            shard_ctx=shard_ctx)
         loss = jnp.mean(losses)
+        loss_key = "loss_per_replica"
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
+            loss_key = "local_loss_per_replica"
         return new_state, {"loss": loss,
-                           "loss_per_replica": losses,
+                           loss_key: losses,
                            "rho": new_state.scopes.rho,
                            "step": new_state.step}
 
@@ -155,12 +164,80 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
                                  axis_name=axis_name,
                                  lr_schedule=lr_schedule,
                                  shard_ctx=shard_ctx)
-    metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
+    loss_key = ("local_loss_per_replica" if axis_name is not None
+                else "loss_per_replica")
+    metric_specs = {"loss": P(), loss_key: P(replica_axis),
                     "rho": P(), "step": P()}
     return make_sharded_step_fn(local_step, mesh, replica_axis,
                                 elastic_state_pspecs(replica_axis),
                                 metric_specs, cfg.n_replicas,
                                 constrain=constrain)
+
+
+# ------------------------------------------------------------------
+# Fused L-step rounds.  Elastic-SGD couples on EVERY step, so a round
+# is simply cfg.L scanned steps — the per-step all-reduce stays (that
+# O(2nN) wire cost is the point of the baseline); the win is one
+# Python dispatch and donated state buffers per L steps.
+# ------------------------------------------------------------------
+
+def _round_from_step(step_fn, cfg):
+    def round_fn(state, batches):
+        def body(s, b):
+            s2, m = step_fn(s, b)
+            return s2, m["loss"]
+        state, losses = jax.lax.scan(body, state, batches)
+        return state, {"loss": jnp.mean(losses), "losses": losses,
+                       "rho": state.scopes.rho, "step": state.step}
+    return round_fn
+
+
+def make_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                  use_kernel: bool = False, lr_schedule=None):
+    """Local fused round (donated state; see parle.make_round_fn for the
+    donation/de-alias contract).  batches leaves: (L, n, B, ...)."""
+    step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                           axis_name=None, lr_schedule=lr_schedule)
+    return jax.jit(_round_from_step(step, cfg), donate_argnums=(0,))
+
+
+def make_sharded_round_fn(loss_fn: Callable, cfg, mesh,
+                          replica_axis: str = "replica",
+                          weight_decay: float = 0.0,
+                          use_kernel: bool = False, lr_schedule=None):
+    """Distributed fused round.  Replica-only meshes scan the sharded
+    step body under the fully-manual shard_map (per-step pmean inside
+    the scan — bit-identical to the step loop).  Composed meshes cannot
+    scan inside a partial-manual body on jax 0.4.37 (the ROADMAP
+    manual-subgroup limit), so they run the GSPMD spelling: the local
+    round body over globally sharded state, the per-step replica mean
+    lowered by GSPMD — same collectives, float-tolerance equality."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import planner
+    from repro.sharding.partition import elastic_state_pspecs
+    from repro.utils.compat import shard_map
+
+    n_dev = mesh.shape[replica_axis]
+    if cfg.n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={cfg.n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+    if planner.in_replica_axes(mesh, replica_axis):
+        step = _make_step_body(loss_fn, cfg, weight_decay,
+                               use_kernel=False, axis_name=None,
+                               lr_schedule=lr_schedule)
+        return jax.jit(_round_from_step(step, cfg), donate_argnums=(0,))
+
+    axis_name = replica_axis if n_dev > 1 else None
+    step = _make_step_body(loss_fn, cfg, weight_decay, use_kernel,
+                           axis_name=axis_name, lr_schedule=lr_schedule)
+    specs = elastic_state_pspecs(replica_axis)
+    metric_specs = {"loss": P(), "losses": P(), "rho": P(), "step": P()}
+    return jax.jit(shard_map(_round_from_step(step, cfg), mesh,
+                             in_specs=(specs, P(None, replica_axis)),
+                             out_specs=(specs, metric_specs)),
+                   donate_argnums=(0,))
 
 
 def average_model(state: ElasticState):

@@ -35,19 +35,41 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress
 from repro.core.scoping import Scopes, init_scopes, update_scopes
-from repro.utils.pytree import (tree_broadcast_axis0, tree_mean_axis0,
-                                tree_unzip, tree_zeros_like)
+from repro.utils.pytree import (tree_broadcast_axis0, tree_cast,
+                                tree_mean_axis0, tree_unzip,
+                                tree_zeros_like)
 
 
 class ParleState(NamedTuple):
-    x: Any            # (n, ...) replicas x^a
-    y: Any            # (n, ...) inner MCMC-free Entropy-SGD iterate
-    z: Any            # (n, ...) exponential average of y
-    v_y: Any          # (n, ...) Nesterov momentum of y
-    v_x: Any          # (n, ...) Nesterov momentum of x^a
+    """Dtype layout under mixed precision (cfg.precision="bf16"): ``y``
+    (the compute iterate — what the loss/grad sees) is bfloat16; ``x``,
+    ``z`` and both momenta stay float32 masters.  ``e`` is the
+    error-feedback residual of the compressed sync (cfg.sync_compress
+    in {"bf16","int8"}), float32, same shape as ``x``; None otherwise
+    (an absent pytree subtree, so tree structure only changes when the
+    feature is on)."""
+
+    x: Any            # (n, ...) replicas x^a                 [f32 master]
+    y: Any            # (n, ...) inner Entropy-SGD iterate    [compute dtype]
+    z: Any            # (n, ...) exponential average of y     [f32 master]
+    v_y: Any          # (n, ...) Nesterov momentum of y       [f32 master]
+    v_x: Any          # (n, ...) Nesterov momentum of x^a     [f32 master]
     step: jnp.ndarray  # () int32, counts inner steps k
     scopes: Scopes
+    e: Any = None     # (n, ...) sync-compression error-feedback residual
+
+
+def _compute_dtype(cfg):
+    get = getattr(cfg, "compute_dtype", None)
+    return get() if get is not None else jnp.float32
+
+
+def _sync_compress(cfg) -> str:
+    method = getattr(cfg, "sync_compress", "none")
+    compress.check_method(method)
+    return method
 
 
 def init(params, cfg) -> ParleState:
@@ -56,24 +78,19 @@ def init(params, cfg) -> ParleState:
     All replicas start at the same point (the paper initializes each
     replica from the same random init; diversity comes from data order).
     """
-    n = cfg.n_replicas
-    x = tree_broadcast_axis0(params, n)
-    return ParleState(
-        x=x, y=x, z=x,
-        v_y=tree_zeros_like(x), v_x=tree_zeros_like(x),
-        step=jnp.zeros((), jnp.int32),
-        scopes=init_scopes(cfg),
-    )
+    return init_from_replicas(tree_broadcast_axis0(params, cfg.n_replicas),
+                              cfg)
 
 
 def init_from_replicas(replica_params, cfg) -> ParleState:
     """Start from distinct per-replica params (leading axis n)."""
-    x = replica_params
+    x = jax.tree.map(lambda l: l.astype(jnp.float32), replica_params)
     return ParleState(
-        x=x, y=x, z=x,
+        x=x, y=tree_cast(x, _compute_dtype(cfg)), z=x,
         v_y=tree_zeros_like(x), v_x=tree_zeros_like(x),
         step=jnp.zeros((), jnp.int32),
         scopes=init_scopes(cfg),
+        e=tree_zeros_like(x) if _sync_compress(cfg) != "none" else None,
     )
 
 
@@ -87,7 +104,13 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
     ``lr_scale``: multiplier on lr_inner (step-decay schedules, §4).
     ``shard_ctx``: planner context when the leaves are FSDP x TP sharded
     over in-replica mesh axes — the kernels then grid over the LOCAL
-    shard of each leaf (see kernels/parle_update.py)."""
+    shard of each leaf (see kernels/parle_update.py).
+
+    Mixed precision: y and grads may be bf16 (cfg.precision="bf16") while
+    z, v, x are f32 masters.  The update always accumulates in f32 —
+    bf16 operands are upcast on read and only the y output is cast back,
+    so the f32 path is bit-identical to the historical all-f32 code (the
+    casts are identities XLA elides)."""
     mu, lr = cfg.momentum, cfg.lr_inner * lr_scale
     inv_gamma = 1.0 / state.scopes.gamma
     alpha = cfg.alpha
@@ -100,11 +123,12 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
             shard_ctx=shard_ctx)
     else:
         def upd(y, z, v, g, x):
-            g_y = g + inv_gamma * (y - x)          # (8a) proximal gradient
+            yf = y.astype(jnp.float32)
+            g_y = g.astype(jnp.float32) + inv_gamma * (yf - x)   # (8a)
             v_new = mu * v + g_y                   # Nesterov
-            y_new = y - lr * (g_y + mu * v_new)
+            y_new = yf - lr * (g_y + mu * v_new)
             z_new = alpha * z + (1.0 - alpha) * y_new   # (8b)
-            return y_new, z_new, v_new
+            return y_new.astype(y.dtype), z_new, v_new
 
         out = jax.tree.map(upd, state.y, state.z, state.v_y, grads, state.x)
         y, z, v_y = tree_unzip(state.y, out, 3)
@@ -116,19 +140,138 @@ def inner_step(state: ParleState, grads, cfg, use_kernel: bool = False,
 # Sync step (8c)-(8d): the one cross-replica collective
 # ------------------------------------------------------------------
 
+def _quantized_leaf_stats(xl, el, method, axis_name, use_kernel):
+    """One leaf's compressed-sync statistics: quantize each replica's
+    contribution with error feedback, gather the payload across the
+    replica axis, dequantize, mean.  Shapes: xl/el (r, ...); returns
+    (xbar (...), e_new (r, ...))."""
+    r, shape, m = xl.shape[0], xl.shape, xl[0].size
+    c = compress.pad_to_chunk((xl.astype(jnp.float32) + el).reshape(r, -1))
+    if use_kernel and method == "int8":
+        from repro.kernels import ops as kops
+        q, s, res = kops.quantize_ef(c)
+    else:
+        q, s, res = compress.quantize_ef(c, method)
+    e_new = res[:, :m].reshape(shape)
+    if axis_name is not None:
+        # pin the QUANTIZED width on the wire.  A bf16 all-gather gets
+        # upcast back to f32 by XLA's float-normalization pass on
+        # backends without bf16 collectives (this CPU container), so
+        # the payload travels as its uint16 bit pattern — integer
+        # collectives are never normalized; bitcasts are free
+        wire_cast = (q.dtype == jnp.bfloat16)
+        if wire_cast:
+            q = jax.lax.bitcast_convert_type(q, jnp.uint16)
+        q = jax.lax.all_gather(q, axis_name, axis=0, tiled=True)
+        if wire_cast:
+            q = jax.lax.bitcast_convert_type(q, jnp.bfloat16)
+        if s is not None:
+            s = jax.lax.all_gather(s, axis_name, axis=0, tiled=True)
+    deq = compress.dequantize(q, s, method)
+    xbar = jnp.mean(deq, axis=0)[:m].reshape(shape[1:])
+    return xbar, e_new
+
+
+def _quantized_sync_stats(x, e, method: str, axis_name, use_kernel: bool,
+                          return_payload: bool = False, shard_ctx=None):
+    """Compress each replica's sync contribution and produce the Eq. (8d)
+    replica mean from the compressed payloads.
+
+    Per leaf: c_a = x_a + e_a is quantized PER REPLICA (so the result is
+    independent of replica-to-device layout), the error-feedback residual
+    e_a' = c_a - dequant(q_a) is kept for the next sync, and the mean is
+    taken over ALL n dequantized contributions.  Under shard_map
+    (axis_name set) the cross-device traffic is the all_gather of the
+    QUANTIZED payloads — bf16 halves, int8 (+ per-1024-chunk f32 scales)
+    quarters the f32 wire bytes, asserted from compiled HLO in
+    tests/test_sync_compress.py.
+
+    With a planner ``shard_ctx`` (composed FSDP x TP mesh) each leaf's
+    quantize/gather/dequant runs under a nested shard_map over the
+    in-replica axes — fully manual, because the flatten-reshape of an
+    auto-sharded leaf trips XLA's manual-subgroup propagation on jax
+    0.4.37 (same workaround as the Pallas kernel drivers).  The payload
+    then chunks per LOCAL SHARD, so the gather moves shard-size
+    compressed bytes per device and quantization boundaries follow the
+    shard layout (composed-mesh trajectories match the local path to
+    tolerance, not bit-for-bit — like the rest of the composed path).
+
+    Returns (xbar_tree, e_new_tree); xbar leaves are un-broadcast (...).
+    With ``return_payload`` the first element is instead the gathered
+    ((q_tree, scales_tree)) of flat (n, Mpad) payload leaves, for the
+    fused dequantize+update kernel (int8, unsharded leaves only).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(x)
+    flat_e = treedef.flatten_up_to(e)
+    xbars, qs, ss, e_news = [], [], [], []
+    for (path, xl), el in zip(flat, flat_e):
+        if return_payload:
+            r, shape, m = xl.shape[0], xl.shape, xl[0].size
+            c = compress.pad_to_chunk(
+                (xl.astype(jnp.float32) + el).reshape(r, -1))
+            from repro.kernels import ops as kops
+            q, s, res = kops.quantize_ef(c)
+            e_news.append(res[:, :m].reshape(shape))
+            if axis_name is not None:
+                q = jax.lax.all_gather(q, axis_name, axis=0, tiled=True)
+                s = jax.lax.all_gather(s, axis_name, axis=0, tiled=True)
+            qs.append(q)
+            ss.append(s)
+            continue
+        call = lambda a, b: _quantized_leaf_stats(a, b, method, axis_name,
+                                                  use_kernel)
+        if shard_ctx is not None:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.sharding.planner import path_names
+            from repro.utils.compat import shard_map
+            spec = shard_ctx.leaf_spec(path_names(path), xl.shape[1:])
+            rep_spec = P(None, *spec)
+            call = shard_map(call, shard_ctx.mesh,
+                             in_specs=(rep_spec, rep_spec),
+                             out_specs=(spec, rep_spec))
+        xbar, e_new = call(xl, el)
+        xbars.append(xbar)
+        e_news.append(e_new)
+    un = jax.tree_util.tree_unflatten
+    if return_payload:
+        return (un(treedef, qs), un(treedef, ss)), un(treedef, e_news)
+    return un(treedef, xbars), un(treedef, e_news)
+
+
 def sync_step(state: ParleState, cfg, axis_name: str | None = None,
               use_kernel: bool = False, lr_scale=1.0,
               shard_ctx=None) -> ParleState:
     mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
+    method = _sync_compress(cfg)
+    cdtype = _compute_dtype(cfg)
 
     # (8d) with eta'' = rho/n: the reference IS the replica mean.
     # Local path: leading-axis mean.  shard_map path (axis_name given):
     # the global n replicas are laid out as (devices, n_per_device), so
     # the global mean = pmean over the mesh axis of the LOCAL leading-
     # axis mean — still exactly one all-reduce, of model-size bytes,
-    # regardless of how many replicas ride each device.
-    if axis_name is None:
+    # regardless of how many replicas ride each device.  With
+    # cfg.sync_compress the payload is quantized per replica and the
+    # collective becomes an all_gather of the compressed bytes.
+    e_new = state.e
+    xbar = payload = None
+    # the fused dequantize+mean+update kernel consumes the raw int8
+    # payloads; the planner-sharded path (shard_ctx) sticks to the jnp
+    # compression + per-shard update kernels
+    kernel_compress = (use_kernel and shard_ctx is None
+                       and method == "int8")
+    if method != "none":
+        stats, e_new = _quantized_sync_stats(
+            state.x, state.e, method, axis_name,
+            use_kernel and shard_ctx is None,
+            return_payload=kernel_compress, shard_ctx=shard_ctx)
+        if kernel_compress:
+            payload = stats
+        else:
+            xbar = stats
+    elif axis_name is None:
         xbar = tree_mean_axis0(state.x)
     else:
         xbar = jax.tree.map(lambda v: jax.lax.pmean(jnp.mean(v, axis=0),
@@ -138,12 +281,20 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
 
     if use_kernel:
         # the kernel consumes the UN-broadcast mean: one model-size xbar
-        # buffer shared across replicas, never materialized at n x N
+        # buffer shared across replicas, never materialized at n x N.
+        # Under bf16 the compute-copy cast y' = cast(x') is fused into
+        # the kernel (third output) — no separate cast pass.
         from repro.kernels import ops as kops
-        x, v_x = kops.parle_sync_update(
-            state.x, state.z, state.v_x, xbar,
-            gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu,
-            shard_ctx=shard_ctx)
+        if payload is not None:
+            x, v_x, y = kops.parle_sync_dequant_update(
+                state.x, state.z, state.v_x, *payload,
+                gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu,
+                y_dtype=cdtype)
+        else:
+            x, v_x, y = kops.parle_sync_update(
+                state.x, state.z, state.v_x, xbar,
+                gamma_scale=gamma_scale, inv_rho=inv_rho, lr=lr, mu=mu,
+                shard_ctx=shard_ctx, y_dtype=cdtype)
     else:
         xbar = jax.tree.map(lambda m, x: jnp.broadcast_to(m[None], x.shape),
                             xbar, state.x)
@@ -156,13 +307,15 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
 
         out = jax.tree.map(upd, state.x, state.z, state.v_x, xbar)
         x, v_x = tree_unzip(state.x, out, 2)
+        y = tree_cast(x, cdtype)         # f32: the identity (y is x)
 
     return ParleState(
-        x=x, y=x, z=x,                    # reset y,z to x^a (paper: "we
+        x=x, y=y, z=x,                    # reset y,z to x^a (paper: "we
         v_y=tree_zeros_like(x),           # initialize y to x every L")
         v_x=v_x,
         step=state.step,
         scopes=update_scopes(state.scopes, cfg),
+        e=e_new,
     )
 
 
@@ -190,11 +343,18 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                     use_kernel: bool, axis_name: str | None,
                     lr_schedule=None, shard_ctx=None):
     """Shared step body of the local and sharded train steps: per-replica
-    grads (vmap over the leading axis) -> fused_step -> metrics.  With
-    ``axis_name`` set, the leading axis holds only the LOCAL replicas and
-    the scalar loss metric is pmean'd to its global value.
+    grads (vmap over the leading axis) -> fused_step -> metrics.
     ``lr_schedule``: step -> multiplier on BOTH cfg.lr and cfg.lr_inner
-    (the paper fixes eta' to the initial eta, so they decay together)."""
+    (the paper fixes eta' to the initial eta, so they decay together).
+
+    Per-replica-loss metric contract: with ``axis_name`` set the leading
+    axis inside this body holds only the LOCAL replicas, so the vector
+    metric is emitted under the honest name ``local_loss_per_replica``
+    (shape (n_local,)); the shard_map wrapper reassembles the global
+    (n,) vector from its P(replica) out-spec and republishes it as
+    ``loss_per_replica`` (see partition.make_sharded_step_fn), so the
+    public metric always covers every replica.  The scalar ``loss`` is
+    pmean'd to its global value right here."""
 
     def replica_grad(params, batch):
         (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
@@ -210,11 +370,13 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
                                axis_name=axis_name, lr_scale=lr_scale,
                                shard_ctx=shard_ctx)
         loss = jnp.mean(losses)
+        loss_key = "loss_per_replica"
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
+            loss_key = "local_loss_per_replica"
         metrics = {
             "loss": loss,
-            "loss_per_replica": losses,
+            loss_key: losses,
             "gamma": new_state.scopes.gamma,
             "rho": new_state.scopes.rho,
             "step": new_state.step,
@@ -274,7 +436,9 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
         def constrain(state):
             c = lambda t: planner.constrain_tree(t, mesh, lead=1)
             return state._replace(x=c(state.x), y=c(state.y), z=c(state.z),
-                                  v_y=c(state.v_y), v_x=c(state.v_x))
+                                  v_y=c(state.v_y), v_x=c(state.v_x),
+                                  e=c(state.e) if state.e is not None
+                                  else None)
 
     # per-device shard: n_local = n / n_dev replicas on the leading axis.
     # A size-1 replica axis (entropy_sgd under FSDP x TP) carries ALL
@@ -285,12 +449,196 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
                                  axis_name=axis_name,
                                  lr_schedule=lr_schedule,
                                  shard_ctx=shard_ctx)
-    metric_specs = {"loss": P(), "loss_per_replica": P(replica_axis),
+    loss_key = ("local_loss_per_replica" if axis_name is not None
+                else "loss_per_replica")
+    metric_specs = {"loss": P(), loss_key: P(replica_axis),
                     "gamma": P(), "rho": P(), "step": P()}
     return make_sharded_step_fn(local_step, mesh, replica_axis,
-                                parle_state_pspecs(replica_axis),
+                                parle_state_pspecs(replica_axis, cfg=cfg),
                                 metric_specs, cfg.n_replicas,
                                 constrain=constrain)
+
+
+# ------------------------------------------------------------------
+# Fused L-step rounds: one compiled program per Eq. (8) round
+# ------------------------------------------------------------------
+
+def _make_round_body(loss_fn: Callable, cfg, weight_decay: float,
+                     use_kernel: bool, axis_name: str | None,
+                     lr_schedule=None, shard_ctx=None):
+    """One whole Parle round as a single traced program: ``lax.scan``
+    over the L = cfg.L inner steps (8a-8b; zero cross-replica traffic)
+    followed by the sync update (8c-8d) — Python re-enters once per
+    round instead of once per step, and no per-step ``k % L`` cond sits
+    in the hot loop.
+
+    Contract: ``batches`` leaves carry a leading round axis of length
+    cfg.L (then the replica axis); the state's step counter must be a
+    multiple of L on entry (rounds tile the trajectory).  Under those
+    invariants the result is BIT-identical to L calls of the fused
+    step: the per-step lr_scale is evaluated at the same counters, and
+    the sync fires with the lr_scale of the round's last inner step
+    (schedule(step - 1)), exactly as the cond'd path does."""
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def round_fn(state: ParleState, batches):
+        def body(s, b):
+            losses, grads = jax.vmap(replica_grad)(s.y, b)
+            if weight_decay:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                     grads, s.y)
+            lr_scale = (lr_schedule(s.step) if lr_schedule is not None
+                        else 1.0)
+            s = inner_step(s, grads, cfg, use_kernel=use_kernel,
+                           lr_scale=lr_scale, shard_ctx=shard_ctx)
+            loss = jnp.mean(losses)
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            return s, loss
+
+        state, losses = jax.lax.scan(body, state, batches)
+        sync_scale = (lr_schedule(state.step - 1) if lr_schedule is not None
+                      else 1.0)
+        state = sync_step(state, cfg, axis_name=axis_name,
+                          use_kernel=use_kernel, lr_scale=sync_scale,
+                          shard_ctx=shard_ctx)
+        metrics = {"loss": jnp.mean(losses), "losses": losses,
+                   "gamma": state.scopes.gamma, "rho": state.scopes.rho,
+                   "step": state.step}
+        return state, metrics
+
+    return round_fn
+
+
+def make_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                  use_kernel: bool = False, lr_schedule=None):
+    """Local (vmap-replica) fused round, compiled with DONATED state
+    buffers: round(state, batches) -> (state, metrics); ``batches``
+    leaves are (L, n, B, ...).  Metrics: scalar round-mean ``loss`` plus
+    the per-step ``losses`` (L,).
+
+    Donation note: the input state's buffers are consumed.  A state
+    fresh out of :func:`init` aliases x = y = z (one buffer); de-alias
+    it once with :func:`dealias_state` before the first call.
+    """
+    body = _make_round_body(loss_fn, cfg, weight_decay, use_kernel,
+                            axis_name=None, lr_schedule=lr_schedule)
+    return jax.jit(body, donate_argnums=(0,))
+
+
+def make_sharded_round_fn(loss_fn: Callable, cfg, mesh,
+                          replica_axis: str = "replica",
+                          weight_decay: float = 0.0,
+                          use_kernel: bool = False, lr_schedule=None):
+    """Distributed fused round.
+
+    Replica-only meshes run the round body under the PR-1 fully-manual
+    shard_map — the scan carries replica-sharded state, the sync pmean /
+    compressed all_gather fires once after it, and the result is
+    bit-identical to the sharded per-step loop on the same mesh (local
+    vs sharded differ by the all-reduce's summation order, ulps).
+
+    Composed meshes (in-replica "data"/"model" axes) cannot scan inside
+    a partial-manual shard_map body on the pinned jax 0.4.37 (XLA's
+    manual-subgroup propagation check trips — the ROADMAP limit), so the
+    round splits: the L inner steps run as pure-GSPMD jit over globally
+    sharded state (they carry no cross-replica collective to lower
+    manually), and the sync runs under the same partial-manual shard_map
+    as the per-step path — keeping the explicit pmean / compressed
+    gather on the wire.  GSPMD partitions the matmul reductions of the
+    inner steps slightly differently than the manual path, so composed-
+    mesh rounds match the step loop to float tolerance, not bit-for-bit
+    (same contract as PR 3's composed-mesh step).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import planner
+    from repro.sharding.partition import parle_state_pspecs
+    from repro.utils.compat import shard_map
+
+    axis_name = replica_axis if mesh.shape[replica_axis] > 1 else None
+    specs = parle_state_pspecs(replica_axis, cfg=cfg)
+    metric_specs = {"loss": P(), "losses": P(), "gamma": P(), "rho": P(),
+                    "step": P()}
+    n_dev = mesh.shape[replica_axis]
+    if cfg.n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={cfg.n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+
+    if not planner.in_replica_axes(mesh, replica_axis):
+        body = _make_round_body(loss_fn, cfg, weight_decay, use_kernel,
+                                axis_name=axis_name,
+                                lr_schedule=lr_schedule)
+        return jax.jit(shard_map(body, mesh,
+                                 in_specs=(specs, P(None, replica_axis)),
+                                 out_specs=(specs, metric_specs)),
+                       donate_argnums=(0,))
+
+    # composed mesh: GSPMD inner scan + partial-manual shard_map sync.
+    # The two live in SEPARATE compiled programs: a jit module holding
+    # both a while-loop (the scan) and manual-subgroup regions (the
+    # shard_map sync) trips the same XLA propagation check as the
+    # scan-inside-shard_map form, so the round dispatches two programs
+    # instead of one — still O(1) Python re-entries per L steps, and
+    # the sync keeps its explicit (optionally compressed) collective.
+    shard_ctx = planner.make_shard_context(mesh, replica_axis)
+    auto = frozenset(planner.in_replica_axes(mesh, replica_axis))
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def inner_scan(state, batches):
+        def scan_body(s, b):      # inner steps: no cross-replica comms,
+            losses, grads = jax.vmap(replica_grad)(s.y, b)   # GSPMD-global
+            if weight_decay:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                     grads, s.y)
+            lr_scale = (lr_schedule(s.step) if lr_schedule is not None
+                        else 1.0)
+            s = inner_step(s, grads, cfg, use_kernel=False,
+                           lr_scale=lr_scale)
+            return s, jnp.mean(losses)
+
+        return jax.lax.scan(scan_body, state, batches)
+
+    def sync_body(state):
+        lr_scale = (lr_schedule(state.step - 1) if lr_schedule is not None
+                    else 1.0)
+        return sync_step(state, cfg, axis_name=axis_name,
+                         use_kernel=use_kernel, lr_scale=lr_scale,
+                         shard_ctx=shard_ctx)
+
+    inner_jit = jax.jit(inner_scan, donate_argnums=(0,))
+    sync_jit = jax.jit(shard_map(sync_body, mesh, in_specs=(specs,),
+                                 out_specs=specs, auto=auto),
+                       donate_argnums=(0,))
+
+    def round_fn(state, batches):
+        state, losses = inner_jit(state, batches)
+        state = sync_jit(state)
+        return state, {"loss": jnp.mean(losses), "losses": losses,
+                       "gamma": state.scopes.gamma,
+                       "rho": state.scopes.rho, "step": state.step}
+
+    return round_fn
+
+
+def dealias_state(state):
+    """Copy every array leaf of a state into a fresh buffer, so the
+    state is safe to hand to a DONATING round fn: ``init`` aliases
+    x = y = z to one buffer (donation rejects duplicates), and some
+    states alias buffers the caller still holds (Elastic-SGD's ``ref``
+    IS the caller's params tree — donating it would delete the caller's
+    arrays).  One full copy, once, before the training loop; shardings
+    are preserved."""
+    return jax.tree.map(
+        lambda l: jnp.array(l, copy=True) if hasattr(l, "devices") else l,
+        state)
 
 
 def average_model(state: ParleState):

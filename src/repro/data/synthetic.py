@@ -45,19 +45,27 @@ class TokenStream:
     def batch(self, step: int) -> dict:
         """Deterministic pseudo-Markov batch for ``step``."""
         idx, cnt = self.shard
-        key = jax.random.PRNGKey(self.seed * 100003 + step * cnt + idx)
-        shape = ((self.batch_size, self.num_codebooks, self.seq_len + 1)
-                 if self.num_codebooks else
-                 (self.batch_size, self.seq_len + 1))
-        base = jax.random.randint(key, shape, 0, self.vocab_size)
-        # impose structure: next token = (prev * 31 + noise) % V  half the time
-        nxt = (base[..., :-1] * 31 + 7) % self.vocab_size
-        coin = jax.random.bernoulli(jax.random.fold_in(key, 1),
-                                    0.5, nxt.shape)
-        seq = jnp.where(coin, nxt, base[..., 1:])
-        seq = jnp.concatenate([base[..., :1], seq], axis=-1)
-        return {"tokens": seq[..., :-1].astype(jnp.int32),
-                "labels": seq[..., 1:].astype(jnp.int32)}
+        return _token_batch(step, idx, cnt, self.seed, self.batch_size,
+                            self.seq_len, self.vocab_size,
+                            self.num_codebooks)
+
+
+def _token_batch(step, idx, cnt, seed, batch_size, seq_len, vocab_size,
+                 num_codebooks):
+    """Body of :meth:`TokenStream.batch`, traceable in ``step`` (the
+    fused-round batch stager jits/vmaps it over a whole round)."""
+    key = jax.random.PRNGKey(seed * 100003 + step * cnt + idx)
+    shape = ((batch_size, num_codebooks, seq_len + 1) if num_codebooks
+             else (batch_size, seq_len + 1))
+    base = jax.random.randint(key, shape, 0, vocab_size)
+    # impose structure: next token = (prev * 31 + noise) % V  half the time
+    nxt = (base[..., :-1] * 31 + 7) % vocab_size
+    coin = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                0.5, nxt.shape)
+    seq = jnp.where(coin, nxt, base[..., 1:])
+    seq = jnp.concatenate([base[..., :1], seq], axis=-1)
+    return {"tokens": seq[..., :-1].astype(jnp.int32),
+            "labels": seq[..., 1:].astype(jnp.int32)}
 
 
 # ------------------------------------------------------------------
@@ -130,3 +138,27 @@ def replica_batches(task_or_stream, step: int, batch_size: int, n_replicas: int,
             b = s2.batch(step)
         outs.append(b)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def make_round_batch_fn(stream: TokenStream, L: int, batch_size: int,
+                        n_replicas: int):
+    """Staging for fused L-step rounds: ONE jitted dispatch builds all
+    L x n batches of a round — (L, n, B, T) leaves, bit-identical to
+    stacking :func:`replica_batches` per step (regression-tested in
+    tests/test_round_fused.py).  The per-step dispatch loop pays ~20
+    un-jitted host ops per step for the same work; the round driver
+    double-buffers this call against the round's device compute."""
+    n = n_replicas
+
+    def one(step, a):
+        return _token_batch(step, a, n, stream.seed, batch_size,
+                            stream.seq_len, stream.vocab_size,
+                            stream.num_codebooks)
+
+    @jax.jit
+    def stage(start_step):
+        steps = start_step + jnp.arange(L)
+        return jax.vmap(lambda s: jax.vmap(lambda a: one(s, a))(
+            jnp.arange(n)))(steps)
+
+    return stage

@@ -52,11 +52,43 @@ def parle_inner_update(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
 
 
 def parle_sync_update(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
-                      shard_ctx=None):
-    return _pu.parle_sync_tree(x, z, v, xbar, gamma_scale=gamma_scale,
-                               inv_rho=inv_rho, lr=lr, mu=mu,
-                               interpret=_interpret(),
-                               shard_ctx=shard_ctx)
+                      shard_ctx=None, y_dtype=None):
+    """Always returns (x', v', y') where y' is the inner-loop reset.
+    For f32 compute y' IS x' (the same buffers — no cost); for bf16 the
+    cast is fused into the kernel as a third output stream."""
+    import jax.numpy as jnp
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != jnp.float32
+    out = _pu.parle_sync_tree(x, z, v, xbar, gamma_scale=gamma_scale,
+                              inv_rho=inv_rho, lr=lr, mu=mu,
+                              interpret=_interpret(),
+                              shard_ctx=shard_ctx,
+                              y_dtype=y_dtype if emit_y else None)
+    if emit_y:
+        return out
+    x2, v2 = out
+    return x2, v2, x2
+
+
+def parle_sync_dequant_update(x, z, v, q_tree, s_tree, *, gamma_scale,
+                              inv_rho, lr, mu, y_dtype=None):
+    """Fused dequantize + replica-mean + sync update (int8 compressed
+    sync).  Returns (x', v', y') like :func:`parle_sync_update`."""
+    import jax.numpy as jnp
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != jnp.float32
+    out = _pu.parle_sync_dequant_tree(
+        x, z, v, q_tree, s_tree, gamma_scale=gamma_scale, inv_rho=inv_rho,
+        lr=lr, mu=mu, interpret=_interpret(),
+        y_dtype=y_dtype if emit_y else None)
+    if emit_y:
+        return out
+    x2, v2 = out
+    return x2, v2, x2
+
+
+def quantize_ef(c):
+    """Fused per-chunk int8 quantize + error-feedback residual on a flat
+    (R, M) stream (M % 8192 == 0).  Returns (q, scales, residual)."""
+    return _pu.quantize_ef_flat(c, interpret=_interpret())
 
 
 def elastic_worker_update(x, v, g, ref, *, inv_rho, lr, mu,

@@ -34,20 +34,24 @@ def _kernel(scal_ref, y_ref, z_ref, v_ref, g_ref, x_ref,
     lr = scal_ref[1]
     mu = scal_ref[2]
     alpha = scal_ref[3]
-    y = y_ref[...]
+    # mixed precision: y/g may arrive bf16 — upcast on read, accumulate
+    # in f32, downcast only the y output.  The casts live INSIDE the
+    # kernel so no separate model-size cast pass ever materializes.
+    y = y_ref[...].astype(jnp.float32)
     x = x_ref[...]
-    g_y = g_ref[...] + inv_gamma * (y - x)
+    g_y = g_ref[...].astype(jnp.float32) + inv_gamma * (y - x)
     v_new = mu * v_ref[...] + g_y
     y_new = y - lr * (g_y + mu * v_new)
     z_new = alpha * z_ref[...] + (1.0 - alpha) * y_new
-    y_out[...] = y_new
+    y_out[...] = y_new.astype(y_out.dtype)
     z_out[...] = z_new
     v_out[...] = v_new
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def parle_update_flat(y, z, v, g, x, scalars, interpret: bool = True):
-    """All operands: flat (M,) f32 with M % BLOCK_ELEMS == 0.
+    """All operands: flat (M,) with M % BLOCK_ELEMS == 0; z, v, x are
+    f32 masters, y and g carry the compute dtype (f32 or bf16).
     scalars: (4,) f32 = [inv_gamma, lr, mu, alpha]."""
     m = y.shape[0]
     rows = m // BLOCK[1]
@@ -55,7 +59,8 @@ def parle_update_flat(y, z, v, g, x, scalars, interpret: bool = True):
     shaped = lambda a: a.reshape(rows, BLOCK[1])
     # index maps under PrefetchScalarGridSpec also receive the scalar ref
     spec = pl.BlockSpec(BLOCK, lambda i, _s: (i, 0))
-    out_shape = [jax.ShapeDtypeStruct((rows, BLOCK[1]), y.dtype)] * 3
+    out_shape = [jax.ShapeDtypeStruct((rows, BLOCK[1]), a.dtype)
+                 for a in (y, z, v)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -104,14 +109,16 @@ def _local_shard_wrap(call, shard_ctx, path, rep_shapes, shared_shape,
 
 def _leaf_call(flat_fn, leaf_group, scalars, interpret):
     """Pad/flatten ONE group of same-shaped leaves, run the flat fused
-    kernel, cut the padding (padding lanes are discarded)."""
+    kernel, cut the padding (padding lanes are discarded).  Leaf dtypes
+    pass through untouched — the kernels handle mixed precision (bf16
+    compute streams next to f32 masters) internally."""
     ref = leaf_group[0]
     shape, size = ref.shape, ref.size
     pad = (-size) % BLOCK_ELEMS
-    fl = lambda a: jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
+    fl = lambda a: jnp.pad(a.reshape(-1), (0, pad))
     res = flat_fn(*[fl(l) for l in leaf_group], scalars,
                   interpret=interpret)
-    cut = lambda a: a[:size].reshape(shape).astype(ref.dtype)
+    cut = lambda a: a[:size].reshape(shape)
     return tuple(cut(r) for r in res)
 
 
@@ -148,7 +155,8 @@ def parle_update_tree(y, z, v, g, x, *, inv_gamma, lr, mu, alpha,
 # Sync step (8c)-(8d): x, v_x update applied right after the all-reduce
 # ------------------------------------------------------------------
 
-def _sync_kernel(scal_ref, x_ref, z_ref, v_ref, xbar_ref, x_out, v_out):
+def _sync_kernel(scal_ref, x_ref, z_ref, v_ref, xbar_ref, x_out, v_out,
+                 *maybe_y_out):
     gamma_scale = scal_ref[0]
     inv_rho = scal_ref[1]
     lr = scal_ref[2]
@@ -156,18 +164,27 @@ def _sync_kernel(scal_ref, x_ref, z_ref, v_ref, xbar_ref, x_out, v_out):
     x = x_ref[0]                       # (8, 1024); replica dim blocked at 1
     g_x = gamma_scale * (x - z_ref[0]) + inv_rho * (x - xbar_ref[...])
     v_new = mu * v_ref[0] + g_x
-    x_out[0] = x - lr * (g_x + mu * v_new)
+    x_new = x - lr * (g_x + mu * v_new)
+    x_out[0] = x_new
     v_out[0] = v_new
+    if maybe_y_out:                    # fused y' = cast(x') (bf16 path)
+        maybe_y_out[0][0] = x_new.astype(maybe_y_out[0].dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("interpret", "y_dtype"))
+def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True,
+                    y_dtype=None):
     """x, z, v: (R, M) f32; xbar: (M,) f32 with M % BLOCK_ELEMS == 0;
     scalars: (4,) f32 = [gamma_scale, inv_rho, lr, mu].
 
     xbar is the (already all-reduced) replica mean: it stays at size M
     and is re-read per replica grid step — never materialized at R*M,
     so the sync's HBM budget is 3 R*M + M reads and 2 R*M writes.
+
+    ``y_dtype``: when given and different from x's dtype, the kernel
+    also emits the inner-loop reset ``y' = cast(x')`` as a third output
+    — the mixed-precision compute copy, cast fused into the same pass.
+    Returns (x', v') or (x', v', y').
     """
     r, m = x.shape
     rows = m // BLOCK[1]
@@ -175,42 +192,47 @@ def parle_sync_flat(x, z, v, xbar, scalars, interpret: bool = True):
     shaped = lambda a: a.reshape(r, rows, BLOCK[1])
     spec = pl.BlockSpec((1,) + BLOCK, lambda a, i, _s: (a, i, 0))
     bar_spec = pl.BlockSpec(BLOCK, lambda a, i, _s: (i, 0))
-    out_shape = [jax.ShapeDtypeStruct((r, rows, BLOCK[1]), x.dtype)] * 2
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != x.dtype
+    out_dtypes = [x.dtype, v.dtype] + ([jnp.dtype(y_dtype)] if emit_y else [])
+    out_shape = [jax.ShapeDtypeStruct((r, rows, BLOCK[1]), d)
+                 for d in out_dtypes]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[spec] * 3 + [bar_spec],
-        out_specs=[spec] * 2,
+        out_specs=[spec] * len(out_shape),
     )
-    x2, v2 = pl.pallas_call(
+    outs = pl.pallas_call(
         _sync_kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
     )(scalars, shaped(x), shaped(z), shaped(v),
       xbar.reshape(rows, BLOCK[1]))
-    return x2.reshape(r, m), v2.reshape(r, m)
+    return tuple(o.reshape(r, m) for o in outs)
 
 
-def _shared_leaf_call(flat_fn, reps, shared, scalars, interpret):
+def _shared_leaf_call(flat_fn, reps, shared, scalars, interpret, **kw):
     """Pad/flatten ONE leaf group of (R, ...) streams + a shared (...)
-    stream, run the flat kernel, cut the padding."""
+    stream, run the flat kernel, cut the padding.  Dtypes pass through
+    (mixed precision is the kernels' business); each output keeps the
+    dtype the kernel declared for it."""
     lead = reps[0]
     r = lead.shape[0]
     size = shared.size
     assert lead.size == r * size, (lead.shape, shared.shape)
     pad = (-size) % BLOCK_ELEMS
-    fl = lambda a, n: jnp.pad(a.reshape(n, -1).astype(jnp.float32),
-                              ((0, 0), (0, pad)))
-    na, nb = flat_fn(*[fl(l, r) for l in reps], fl(shared, 1)[0],
-                     scalars, interpret=interpret)
-    cut = lambda a: a[:, :size].reshape(lead.shape).astype(lead.dtype)
-    return cut(na), cut(nb)
+    fl = lambda a, n: jnp.pad(a.reshape(n, -1), ((0, 0), (0, pad)))
+    outs = flat_fn(*[fl(l, r) for l in reps], fl(shared, 1)[0],
+                   scalars, interpret=interpret, **kw)
+    cut = lambda a: a[:, :size].reshape(lead.shape)
+    return tuple(cut(o) for o in outs)
 
 
 def _replicated_shared_tree(flat_fn, rep_trees, shared_tree, scalars,
-                            interpret, shard_ctx=None):
-    """Shared leafwise driver for the two (R, M)-streams + one shared
+                            interpret, num_out: int = 2, shard_ctx=None,
+                            **kw):
+    """Shared leafwise driver for the (R, M)-streams + one shared
     M-stream kernels (sync: xbar; elastic: ref).  With a planner
     ``shard_ctx`` each leaf runs under a nested shard_map over the
     in-replica axes: the kernel grids over the LOCAL shard and the
@@ -220,33 +242,39 @@ def _replicated_shared_tree(flat_fn, rep_trees, shared_tree, scalars,
     rep_leaves = [[l for _, l in flat0]] \
         + [treedef.flatten_up_to(t) for t in rep_trees[1:]]
     shared_leaves = treedef.flatten_up_to(shared_tree)
-    out_a, out_b = [], []
+    outs = [[] for _ in range(num_out)]
     for (path, _), *group in zip(flat0, *rep_leaves, shared_leaves):
         *reps, shared = group
         call = lambda *rs: _shared_leaf_call(flat_fn, rs[:-1], rs[-1],
-                                             scalars, interpret)
+                                             scalars, interpret, **kw)
         if shard_ctx is not None:
             call = _local_shard_wrap(
                 call, shard_ctx, path, [l.shape for l in reps],
-                shared.shape, num_out=2)
-        na, nb = call(*reps, shared)
-        out_a.append(na)
-        out_b.append(nb)
+                shared.shape, num_out=num_out)
+        res = call(*reps, shared)
+        for acc, o in zip(outs, res):
+            acc.append(o)
     un = jax.tree_util.tree_unflatten
-    return un(treedef, out_a), un(treedef, out_b)
+    return tuple(un(treedef, o) for o in outs)
 
 
 def parle_sync_tree(x, z, v, xbar, *, gamma_scale, inv_rho, lr, mu,
-                    interpret: bool = True, shard_ctx=None):
+                    interpret: bool = True, shard_ctx=None, y_dtype=None):
     """Fused sync update (8c-8d) leafwise over pytrees.
 
     x, z, v leaves carry the leading replica axis (R, ...); xbar leaves
     are the UN-broadcast replica mean of shape (...) — one copy shared
-    by all R replicas.
+    by all R replicas.  With a bf16 ``y_dtype`` the kernel also emits
+    the fused compute copy y' = cast(x') (third tree); returns
+    (x', v') otherwise.
     """
     scalars = _pack_scalars(gamma_scale, inv_rho, lr, mu)
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != jnp.float32
     return _replicated_shared_tree(parle_sync_flat, (x, z, v), xbar,
-                                   scalars, interpret, shard_ctx=shard_ctx)
+                                   scalars, interpret,
+                                   num_out=3 if emit_y else 2,
+                                   shard_ctx=shard_ctx,
+                                   y_dtype=y_dtype if emit_y else None)
 
 
 # ------------------------------------------------------------------
@@ -260,7 +288,8 @@ def _elastic_kernel(scal_ref, x_ref, v_ref, g_ref, ref_ref, x_out, v_out):
     lr = scal_ref[1]
     mu = scal_ref[2]
     x = x_ref[0]                       # (8, 1024); replica dim blocked at 1
-    g_e = g_ref[0] + inv_rho * (x - ref_ref[...])
+    # g may be the bf16 compute grad — upcast on read (fused cast)
+    g_e = g_ref[0].astype(jnp.float32) + inv_rho * (x - ref_ref[...])
     v_new = mu * v_ref[0] + g_e
     x_out[0] = x - lr * (g_e + mu * v_new)
     v_out[0] = v_new
@@ -308,3 +337,141 @@ def elastic_update_tree(x, v, g, ref, *, inv_rho, lr, mu,
     scalars = _pack_scalars(inv_rho, lr, mu)
     return _replicated_shared_tree(elastic_update_flat, (x, v, g), ref,
                                    scalars, interpret, shard_ctx=shard_ctx)
+
+
+# ------------------------------------------------------------------
+# Compressed sync (Eq. 8d payload): fused quantize+error-feedback and
+# dequantize+mean+update kernels.  Chunk layout matches
+# core/compress.py exactly (CHUNK = the 1024 lane dim, streams padded
+# to BLOCK_ELEMS), so kernel and jnp reference produce bit-identical
+# payloads; oracles in kernels/ref.py.
+# ------------------------------------------------------------------
+
+def _quant_ef_kernel(c_ref, q_out, s_out, e_out):
+    """Per block (1, 8, 1024): one int8 payload row + one f32 scale per
+    1024-chunk + the error-feedback residual, in a single pass (1 read,
+    ~1.25 writes of the stream)."""
+    c = c_ref[0]                             # (8, 1024) f32
+    amax = jnp.max(jnp.abs(c), axis=-1)      # (8,)
+    scale = jnp.where(amax == 0, 1.0, amax * (1.0 / 127.0))
+    q = jnp.clip(jnp.round(c / scale[:, None]), -127, 127)
+    deq = q * scale[:, None]
+    q_out[0] = q.astype(jnp.int8)
+    s_out[0] = scale
+    e_out[0] = c - deq
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_ef_flat(c, interpret: bool = True):
+    """c: (R, M) f32 with M % BLOCK_ELEMS == 0.  Returns (q, scales, e):
+    q (R, M) int8, scales (R, M // 1024) f32, e = c - dequant(q) f32."""
+    r, m = c.shape
+    rows = m // BLOCK[1]
+    grid = (r, rows // BLOCK[0])
+    spec = pl.BlockSpec((1,) + BLOCK, lambda a, i: (a, i, 0))
+    s_spec = pl.BlockSpec((1, BLOCK[0]), lambda a, i: (a, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((r, rows, BLOCK[1]), jnp.int8),
+        jax.ShapeDtypeStruct((r, rows), jnp.float32),
+        jax.ShapeDtypeStruct((r, rows, BLOCK[1]), jnp.float32),
+    ]
+    q, s, e = pl.pallas_call(
+        _quant_ef_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, s_spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(c.reshape(r, rows, BLOCK[1]))
+    return q.reshape(r, m), s, e.reshape(r, m)
+
+
+def _dequant_sync_kernel(scal_ref, x_ref, z_ref, v_ref, q_ref, s_ref,
+                         x_out, v_out, *maybe_y_out):
+    """Sync update with the replica mean reconstructed INSIDE the kernel
+    from the gathered quantized payloads: dequantize (n, 8, 1024) int8
+    blocks with their per-chunk scales, mean over n, then Eq. 8c-8d —
+    xbar never round-trips HBM as f32."""
+    gamma_scale = scal_ref[0]
+    inv_rho = scal_ref[1]
+    lr = scal_ref[2]
+    mu = scal_ref[3]
+    deq = q_ref[...].astype(jnp.float32) * s_ref[...][..., None]
+    xbar = jnp.mean(deq, axis=0)             # (8, 1024)
+    x = x_ref[0]
+    g_x = gamma_scale * (x - z_ref[0]) + inv_rho * (x - xbar)
+    v_new = mu * v_ref[0] + g_x
+    x_new = x - lr * (g_x + mu * v_new)
+    x_out[0] = x_new
+    v_out[0] = v_new
+    if maybe_y_out:                          # fused y' = cast(x')
+        maybe_y_out[0][0] = x_new.astype(maybe_y_out[0].dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "y_dtype"))
+def parle_sync_dequant_flat(x, z, v, q, s, scalars, interpret: bool = True,
+                            y_dtype=None):
+    """Fused dequantize + replica-mean + sync update.
+
+    x, z, v: (R, M) f32 (R = local replicas); q: (n, M) int8 — the
+    all-gathered per-replica payloads of ALL n global replicas; s:
+    (n, M // 1024) f32 per-chunk scales; scalars as parle_sync_flat.
+    Returns (x', v') or (x', v', y') like :func:`parle_sync_flat`.
+    """
+    r, m = x.shape
+    n = q.shape[0]
+    rows = m // BLOCK[1]
+    grid = (r, rows // BLOCK[0])
+    shaped = lambda a: a.reshape(r, rows, BLOCK[1])
+    spec = pl.BlockSpec((1,) + BLOCK, lambda a, i, _s: (a, i, 0))
+    q_spec = pl.BlockSpec((n,) + BLOCK, lambda a, i, _s: (0, i, 0))
+    s_spec = pl.BlockSpec((n, BLOCK[0]), lambda a, i, _s: (0, i))
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != x.dtype
+    out_dtypes = [x.dtype, v.dtype] + ([jnp.dtype(y_dtype)] if emit_y else [])
+    out_shape = [jax.ShapeDtypeStruct((r, rows, BLOCK[1]), d)
+                 for d in out_dtypes]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[spec] * 3 + [q_spec, s_spec],
+        out_specs=[spec] * len(out_shape),
+    )
+    outs = pl.pallas_call(
+        _dequant_sync_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, shaped(x), shaped(z), shaped(v),
+      q.reshape(n, rows, BLOCK[1]), s.reshape(n, rows))
+    return tuple(o.reshape(r, m) for o in outs)
+
+
+def parle_sync_dequant_tree(x, z, v, q_tree, s_tree, *, gamma_scale,
+                            inv_rho, lr, mu, interpret: bool = True,
+                            y_dtype=None):
+    """Fused dequantize+mean+sync-update leafwise over pytrees.
+
+    x, z, v leaves carry the leading (local-)replica axis (R, ...);
+    q_tree/s_tree leaves are the all-gathered FLAT payloads (n, Mpad)
+    int8 / (n, Mpad // 1024) f32 produced by the quantize side (Mpad =
+    the leaf's per-replica size padded to the block multiple)."""
+    scalars = _pack_scalars(gamma_scale, inv_rho, lr, mu)
+    emit_y = y_dtype is not None and jnp.dtype(y_dtype) != jnp.float32
+    flat0, treedef = jax.tree_util.tree_flatten(x)
+    flat_z = treedef.flatten_up_to(z)
+    flat_v = treedef.flatten_up_to(v)
+    flat_q = treedef.flatten_up_to(q_tree)
+    flat_s = treedef.flatten_up_to(s_tree)
+    num_out = 3 if emit_y else 2
+    outs = [[] for _ in range(num_out)]
+    for xl, zl, vl, ql, sl in zip(flat0, flat_z, flat_v, flat_q, flat_s):
+        r, shape, size = xl.shape[0], xl.shape, xl[0].size
+        mpad = ql.shape[1]
+        fl = lambda a: jnp.pad(a.reshape(r, -1), ((0, 0), (0, mpad - size)))
+        res = parle_sync_dequant_flat(
+            fl(xl), fl(zl), fl(vl), ql, sl, scalars, interpret=interpret,
+            y_dtype=y_dtype if emit_y else None)
+        for acc, o in zip(outs, res):
+            acc.append(o[:, :size].reshape(shape))
+    un = jax.tree_util.tree_unflatten
+    return tuple(un(treedef, o) for o in outs)

@@ -50,6 +50,23 @@ def make_algorithm_sharded_step(algo_name: str, cfg, pcfg, mesh,
         lr_schedule=lr_schedule)
 
 
+def make_algorithm_round(algo_name: str, cfg, pcfg, mesh=None,
+                         replica_axis: str = "replica",
+                         weight_decay: float = 0.0,
+                         use_flash: bool = False, remat: bool = False,
+                         use_kernel: bool = False, lr_schedule=None):
+    """The fused L-step round for any registered algo: ONE compiled,
+    state-donating program per pcfg.L steps — round(state, batches) ->
+    (state, metrics) with batches leaves (L, n, B, ...).  Python
+    re-enters once per round (see the Algorithm protocol docstring for
+    the donation and step-counter contracts)."""
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
+    return registry.get(algo_name).make_round_fn(
+        loss_fn, pcfg, mesh=mesh, replica_axis=replica_axis,
+        weight_decay=weight_decay, use_kernel=use_kernel,
+        lr_schedule=lr_schedule)
+
+
 def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,
                      use_flash: bool = False, remat: bool = False,
                      use_kernel: bool = False):

@@ -51,6 +51,23 @@ def build_argparser():
                     help="paper §5: each replica sees a disjoint shard")
     ap.add_argument("--use-kernel", action="store_true",
                     help="fused Pallas updates (interpret on CPU)")
+    ap.add_argument("--round-fused", action="store_true",
+                    help="compile one whole L-step round (inner scan + "
+                         "sync) into a single donated-buffer program and "
+                         "stage each round's batches in one jitted "
+                         "dispatch, double-buffered against the round — "
+                         "Python re-enters once per L steps.  --steps is "
+                         "rounded down to a multiple of L")
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
+                    help="bf16: store the compute iterate (y / activations"
+                         " / grads) in bfloat16; x, z and momenta stay "
+                         "f32 masters")
+    ap.add_argument("--sync-compress", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="quantize the Eq. 8d sync payload (parle/"
+                         "entropy_sgd): bf16 halves, int8 (per-chunk "
+                         "scales + error-feedback residual in the state) "
+                         "quarters the wire bytes")
     ap.add_argument("--mesh", default="",
                     help="shard replicas over a device mesh, e.g. "
                          "'replica:4' or 'replica:2,data:2,model:2'; parle "
@@ -99,7 +116,8 @@ def main(argv=None):
     pcfg = algo.canonicalize_cfg(ParleConfig(
         n_replicas=n, L=args.L, lr=args.lr, lr_inner=args.lr,
         batches_per_epoch=max(args.steps // 4, 1),
-        lr_drop_steps=drops, lr_drop_factor=args.lr_drop_factor))
+        lr_drop_steps=drops, lr_drop_factor=args.lr_drop_factor,
+        precision=args.precision, sync_compress=args.sync_compress))
     n = pcfg.n_replicas                 # canonicalized (entropy_sgd -> 1)
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                          batch_size=args.batch, seed=args.seed)
@@ -122,7 +140,8 @@ def main(argv=None):
             # place the state on its planner shardings up front: each
             # device holds 1/(data*model) of every leaf, so configs too
             # big for one device's HBM are loadable from step 0
-            specs = algo.state_pspecs(raxis, params=params, mesh=mesh)
+            specs = algo.state_pspecs(raxis, params=params, mesh=mesh,
+                                      cfg=pcfg)
             state = jax.device_put(state, partition.shardings(mesh, specs))
         print(json.dumps({"mesh": dict(mesh.shape), "replica_axis": raxis,
                           "in_replica_axes": list(inner_axes),
@@ -133,21 +152,27 @@ def main(argv=None):
 
     t0 = time.time()
     history = []
-    for i in range(start, start + args.steps):
-        batch = replica_batches(stream, i, args.batch, n,
-                                split=args.split_data)
-        state, metrics = step_fn(state, batch)
-        if (i + 1) % args.log_every == 0 or i == start:
-            rec = {"step": i + 1, "loss": round(float(metrics["loss"]), 4),
-                   "wall_s": round(time.time() - t0, 1)}
-            rec.update({k: round(v, 4)
-                        for k, v in algo.diagnostics(state).items()})
-            print(json.dumps(rec), flush=True)
-            history.append(rec)
-        if (args.checkpoint_every and args.checkpoint_dir
-                and (i + 1) % args.checkpoint_every == 0):
-            ckpt.save(f"{args.checkpoint_dir}/step{i+1:06d}.npz", state,
-                      step=i + 1, meta={"arch": cfg.name}, algo=args.algo)
+    if args.round_fused:
+        history, state = _run_rounds(args, algo, pcfg, cfg, model, mesh,
+                                     raxis, stream, state, start, n, t0)
+    else:
+        for i in range(start, start + args.steps):
+            batch = replica_batches(stream, i, args.batch, n,
+                                    split=args.split_data)
+            state, metrics = step_fn(state, batch)
+            if (i + 1) % args.log_every == 0 or i == start:
+                rec = {"step": i + 1,
+                       "loss": round(float(metrics["loss"]), 4),
+                       "wall_s": round(time.time() - t0, 1)}
+                rec.update({k: round(v, 4)
+                            for k, v in algo.diagnostics(state).items()})
+                print(json.dumps(rec), flush=True)
+                history.append(rec)
+            if (args.checkpoint_every and args.checkpoint_dir
+                    and (i + 1) % args.checkpoint_every == 0):
+                ckpt.save(f"{args.checkpoint_dir}/step{i+1:06d}.npz", state,
+                          step=i + 1, meta={"arch": cfg.name},
+                          algo=args.algo)
 
     final = algo.deployable(state)
     loss, _ = jax.jit(model.loss)(final, _eval_batch(stream, cfg))
@@ -155,6 +180,59 @@ def main(argv=None):
                       "algo": args.algo, "arch": cfg.name,
                       "total_wall_s": round(time.time() - t0, 1)}))
     return history
+
+
+def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
+                start, n, t0):
+    """The fused-round driver loop: one donated-buffer compiled program
+    per L steps, with each round's batches staged on device by a single
+    jitted dispatch that is double-buffered against the round's compute
+    (Python enqueues round r+1's batches right after dispatching round
+    r, before touching any of round r's results)."""
+    from repro.core.parle import dealias_state
+    from repro.data.synthetic import make_round_batch_fn
+
+    L = pcfg.L
+    rounds = args.steps // L
+    if args.steps % L:
+        print(json.dumps({"note": f"--round-fused runs whole L={L} "
+                          f"rounds; running {rounds * L} of "
+                          f"{args.steps} steps"}), flush=True)
+    if start % L:
+        raise SystemExit(f"--round-fused resumes only from round "
+                         f"boundaries (step {start} % L={L} != 0)")
+    round_fn = algo.make_round_fn(model.loss, pcfg, mesh=mesh,
+                                  replica_axis=raxis or "replica",
+                                  use_kernel=args.use_kernel)
+    stage = make_round_batch_fn(stream, L, args.batch, n)
+    state = dealias_state(state)     # donated rounds need distinct buffers
+    log_rounds = max(1, args.log_every // L)
+    history = []
+    nxt = stage(start)
+    for r in range(rounds):
+        cur, nxt = nxt, None
+        state, metrics = round_fn(state, cur)       # async dispatch
+        if r + 1 < rounds:
+            nxt = stage(start + (r + 1) * L)        # prefetch round r+1
+        gstep = start + (r + 1) * L
+        if (r + 1) % log_rounds == 0 or r == 0:
+            rec = {"step": gstep,
+                   "loss": round(float(metrics["loss"]), 4),
+                   "round": r + 1,
+                   "wall_s": round(time.time() - t0, 1)}
+            rec.update({k: round(v, 4)
+                        for k, v in algo.diagnostics(state).items()})
+            print(json.dumps(rec), flush=True)
+            history.append(rec)
+        # a round advances L steps at once: checkpoint whenever it
+        # CROSSES a checkpoint_every boundary, not only on exact
+        # multiples (e.g. --L 3 --checkpoint-every 50 writes at 51)
+        ce = args.checkpoint_every
+        if (ce and args.checkpoint_dir
+                and gstep // ce > (gstep - L) // ce):
+            ckpt.save(f"{args.checkpoint_dir}/step{gstep:06d}.npz", state,
+                      step=gstep, meta={"arch": cfg.name}, algo=args.algo)
+    return history, state
 
 
 def _eval_batch(stream, cfg):

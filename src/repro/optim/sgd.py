@@ -9,7 +9,8 @@ from typing import Any, Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.utils.pytree import tree_unzip, tree_zeros_like
+from repro.utils.pytree import (compute_cast, tree_unzip,
+                                tree_zeros_like)
 
 
 class SGDState(NamedTuple):
@@ -79,8 +80,9 @@ def _make_step_body(loss_fn: Callable, cfg, weight_decay: float,
 
     def step(state: SGDState, batch):
         losses, grads = jax.vmap(shard_grad, in_axes=(None, 0))(
-            state.params, batch)
-        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            compute_cast(state.params, cfg), batch)
+        grads = jax.tree.map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=0), grads)
         loss = jnp.mean(losses)
         if axis_name is not None:
             grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
@@ -156,3 +158,65 @@ def make_sharded_train_step(loss_fn: Callable, cfg, mesh,
     return make_sharded_step_fn(local_step, mesh, replica_axis,
                                 sgd_state_pspecs(), {"loss": P(), "lr": P()},
                                 cfg.n_replicas)
+
+
+# ------------------------------------------------------------------
+# Fused L-step rounds: L scanned steps per Python dispatch (SGD has no
+# sync boundary — the round length just mirrors the Parle family's).
+# ------------------------------------------------------------------
+
+def _round_from_step(step_fn):
+    def round_fn(state, batches):
+        def body(s, b):
+            s2, m = step_fn(s, b)
+            return s2, (m["loss"], m["lr"])
+        state, (losses, lrs) = jax.lax.scan(body, state, batches)
+        return state, {"loss": jnp.mean(losses), "losses": losses,
+                       "lr": lrs[-1], "step": state.step}
+    return round_fn
+
+
+def make_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                  lr_schedule=None):
+    """Local fused round with donated state buffers; batches leaves are
+    (L, n, B, ...) — see parle.make_round_fn for the donation
+    contract."""
+    step = _make_step_body(loss_fn, cfg, weight_decay, None, lr_schedule)
+    return jax.jit(_round_from_step(step), donate_argnums=(0,))
+
+
+def make_sharded_round_fn(loss_fn: Callable, cfg, mesh,
+                          replica_axis: str = "replica",
+                          weight_decay: float = 0.0, lr_schedule=None):
+    """Data-parallel fused round over a mesh — always the pure-GSPMD
+    spelling (SGD's fully-replicated state inside a manual shard_map
+    scan trips XLA's manual-subgroup propagation on jax 0.4.37, the
+    ROADMAP limit, so the jit formulation is the supported one on every
+    mesh): batch shards ride ``replica_axis`` via a sharding constraint
+    and the per-step grad mean lowers to the same all-reduce."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import planner
+
+    n_dev = mesh.shape[replica_axis]
+    if cfg.n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={cfg.n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+    local_round = _round_from_step(
+        _make_step_body(loss_fn, cfg, weight_decay, None, lr_schedule))
+    composed = bool(planner.in_replica_axes(mesh, replica_axis))
+    cst_state = lambda st: st
+    if composed:
+        cst_state = lambda st: st._replace(
+            params=planner.constrain_tree(st.params, mesh, lead=0),
+            v=planner.constrain_tree(st.v, mesh, lead=0))
+    bspec = NamedSharding(mesh, P(None, replica_axis))
+
+    def round_fn(state, batches):
+        batches = jax.tree.map(
+            lambda b: jax.lax.with_sharding_constraint(b, bspec), batches)
+        new_state, metrics = local_round(cst_state(state), batches)
+        return cst_state(new_state), metrics
+
+    return jax.jit(round_fn, donate_argnums=(0,))

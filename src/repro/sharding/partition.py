@@ -60,7 +60,7 @@ def prepend_axis(pspec_tree, axis_name: Optional[str]):
 
 
 def parle_state_pspecs(replica_axis: str, params=None,
-                       mesh: Optional[Mesh] = None):
+                       mesh: Optional[Mesh] = None, cfg=None):
     """Spec tree for a ``ParleState``.
 
     Without ``params`` (legacy/prefix form): the five (n, ...) iterate
@@ -76,16 +76,23 @@ def parle_state_pspecs(replica_axis: str, params=None,
     Returned as a prefix tree (per-leaf under the iterate fields, single
     replicated specs for step/scopes), the form jax.device_put and
     jit in_shardings consume.
-    """
+
+    ``cfg``: when it enables a compressed sync (cfg.sync_compress !=
+    "none") the state carries the error-feedback residual ``e`` — same
+    shape and sharding as ``x``; the spec tree must mirror that extra
+    subtree.  Dtype layout note: specs are dtype-agnostic — under
+    cfg.precision="bf16" the ``y`` subtree is bfloat16 and everything
+    else f32, with identical PartitionSpecs."""
     from repro.core.parle import ParleState
+    has_e = cfg is not None and getattr(cfg, "sync_compress", "none") != "none"
     if params is None:
         rep = P(replica_axis)
         return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
-                          step=P(), scopes=P())
+                          step=P(), scopes=P(), e=rep if has_e else None)
     plan = planner_mod.plan_tree(params, mesh=mesh)
     rep = plan.pspecs_with_leading(replica_axis)
     return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
-                      step=P(), scopes=P())
+                      step=P(), scopes=P(), e=rep if has_e else None)
 
 
 def elastic_state_pspecs(replica_axis: str, params=None,
@@ -131,6 +138,13 @@ def make_sharded_step_fn(local_step, mesh, replica_axis: str, state_specs,
     a state -> state function built from :mod:`repro.sharding.planner` —
     applies to the body's inputs and outputs.  On a replica-only mesh
     both degenerate to the PR-1 behavior exactly.
+
+    Metric-key contract: a body that runs under an ``axis_name`` emits
+    its per-replica loss vector as ``local_loss_per_replica`` (it holds
+    only the device-local replicas inside the body — see
+    parle._make_step_body); the P(replica) out-spec reassembles the
+    global (n,) vector, which this wrapper republishes under the public
+    name ``loss_per_replica``.
     """
     import jax
 
@@ -152,10 +166,20 @@ def make_sharded_step_fn(local_step, mesh, replica_axis: str, state_specs,
             out_state, metrics = local_step(constrain(state), batch)
             return constrain(out_state), metrics
 
-    return jax.jit(shard_map(step, mesh,
-                             in_specs=(state_specs, P(replica_axis)),
-                             out_specs=(state_specs, metric_specs),
-                             auto=auto))
+    sharded = shard_map(step, mesh,
+                        in_specs=(state_specs, P(replica_axis)),
+                        out_specs=(state_specs, metric_specs),
+                        auto=auto)
+
+    def run(state, batch):
+        out_state, metrics = sharded(state, batch)
+        if "local_loss_per_replica" in metrics:
+            metrics = dict(metrics)
+            metrics["loss_per_replica"] = \
+                metrics.pop("local_loss_per_replica")
+        return out_state, metrics
+
+    return jax.jit(run)
 
 
 def sanitize_pspecs(pspec_tree, sds_tree, mesh: Mesh):

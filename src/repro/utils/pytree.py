@@ -5,6 +5,21 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_cast(tree, dtype):
+    """astype leafwise — the identity (same buffers) when dtypes match,
+    so f32 paths keep their historical aliasing exactly."""
+    return jax.tree.map(lambda l: l.astype(dtype), tree)
+
+
+def compute_cast(tree, cfg):
+    """Mixed-precision compute copy: cast to ``cfg.compute_dtype()``
+    when the config defines one; the identity otherwise.  Shared by
+    every algorithm's step body (parle casts at init/sync, elastic/sgd
+    per step)."""
+    get = getattr(cfg, "compute_dtype", None)
+    return tree if get is None else tree_cast(tree, get())
+
+
 def tree_add(a, b):
     return jax.tree.map(jnp.add, a, b)
 

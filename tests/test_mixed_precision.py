@@ -1,0 +1,164 @@
+"""bf16 mixed-precision hot path (cfg.precision="bf16").
+
+Layout contract: the compute iterate y (and hence activations/grads) is
+bfloat16; x, z and both momenta stay float32 masters; the sync resets
+y to cast(x').  The f32 path must stay bit-for-bit what it always was
+(the casts are identities) — that is covered by test_round_fused /
+test_core_parle; here we pin the bf16 layout, the kernel fusion of the
+casts, checkpoint round-trips, and loss parity with f32 on the
+quickstart task.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ParleConfig
+from repro.core import parle, registry
+from repro.data.synthetic import TeacherTask, replica_batches
+from repro.kernels import ops as kops
+from repro.models.convnet import (classification_loss, init_mlp,
+                                  mlp_forward)
+
+
+def _cfg(**kw):
+    base = dict(n_replicas=2, L=3, lr=0.05, lr_inner=0.05,
+                batches_per_epoch=10, precision="bf16")
+    base.update(kw)
+    return ParleConfig(**base)
+
+
+def _params(key):
+    return {"w": jax.random.normal(key, (6, 9)) * 0.2,
+            "nested": {"b": jax.random.normal(jax.random.fold_in(key, 1),
+                                              (4, 5)) * 0.2}}
+
+
+def _loss(p, b):
+    flat = jnp.concatenate([p["w"].reshape(-1), p["nested"]["b"].reshape(-1)])
+    return jnp.mean((flat - b["t"]) ** 2), ()
+
+
+def test_bf16_state_dtype_layout():
+    cfg = _cfg()
+    state = parle.init(_params(jax.random.PRNGKey(0)), cfg)
+    for leaf in jax.tree_util.tree_leaves(state.y):
+        assert leaf.dtype == jnp.bfloat16
+    for tree in (state.x, state.z, state.v_y, state.v_x):
+        for leaf in jax.tree_util.tree_leaves(tree):
+            assert leaf.dtype == jnp.float32
+    # the layout survives a full step (inner) and a sync boundary
+    step = jax.jit(registry.get("parle").make_step(_loss, cfg))
+    batch = {"t": jax.random.normal(jax.random.PRNGKey(1), (2, 74))}
+    for _ in range(cfg.L):
+        state, metrics = step(state, batch)
+    assert jax.tree_util.tree_leaves(state.y)[0].dtype == jnp.bfloat16
+    assert jax.tree_util.tree_leaves(state.x)[0].dtype == jnp.float32
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_bf16_grads_are_bf16():
+    """The compute path really runs in bf16: grads wrt the bf16 y are
+    bf16 (no silent f32 upcast of the backward pass)."""
+    cfg = _cfg()
+    state = parle.init(_params(jax.random.PRNGKey(0)), cfg)
+    g = jax.grad(lambda p: _loss(p, {"t": jnp.zeros((74,))})[0])(
+        jax.tree.map(lambda l: l[0], state.y))
+    assert jax.tree_util.tree_leaves(g)[0].dtype == jnp.bfloat16
+
+
+def test_inner_kernel_bf16_matches_jnp_path():
+    cfg = _cfg()
+    state = parle.dealias_state(parle.init(_params(jax.random.PRNGKey(2)),
+                                           cfg))
+    grads = jax.tree.map(
+        lambda y: jax.random.normal(jax.random.PRNGKey(3), y.shape,
+                                    jnp.float32).astype(jnp.bfloat16) * 0.1,
+        state.y)
+    a = parle.inner_step(state, grads, cfg, use_kernel=False)
+    b = parle.inner_step(state, grads, cfg, use_kernel=True)
+    for fa, fb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(fa, dtype=np.float32), np.asarray(fb, np.float32),
+            rtol=1e-5, atol=1e-6)
+    assert jax.tree_util.tree_leaves(b.y)[0].dtype == jnp.bfloat16
+
+
+def test_sync_kernel_emits_fused_bf16_y():
+    """The sync kernel's third output IS cast(x') — the mixed-precision
+    compute copy, produced inside the kernel pass."""
+    cfg = _cfg()
+    state = parle.dealias_state(parle.init(_params(jax.random.PRNGKey(4)),
+                                           cfg))
+    state = state._replace(
+        z=jax.tree.map(lambda a: a * 0.5, state.z),
+        v_x=jax.tree.map(jnp.ones_like, state.v_x))
+    out = parle.sync_step(state, cfg, use_kernel=True)
+    ref = parle.sync_step(state, cfg, use_kernel=False)
+    for leaf, want in zip(jax.tree_util.tree_leaves(out.y),
+                          jax.tree_util.tree_leaves(ref.y)):
+        assert leaf.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(leaf, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    for leaf, xleaf in zip(jax.tree_util.tree_leaves(out.y),
+                           jax.tree_util.tree_leaves(out.x)):
+        np.testing.assert_array_equal(
+            np.asarray(leaf),
+            np.asarray(xleaf.astype(jnp.bfloat16)))
+
+
+def test_bf16_matches_f32_on_quickstart_task():
+    """The paper's quickstart task (teacher-MLP classification): the
+    bf16 trajectory tracks f32 within tolerance after several rounds."""
+    task = TeacherTask()
+    loss_raw = classification_loss(mlp_forward)
+    loss_fn = lambda p, b: (loss_raw(p, b)[0], ())
+    params = init_mlp(jax.random.PRNGKey(0))
+    algo = registry.get("parle")
+    finals = {}
+    for precision in ("f32", "bf16"):
+        cfg = ParleConfig(n_replicas=2, L=5, lr=0.1, lr_inner=0.1,
+                          batches_per_epoch=task.batches_per_epoch(64),
+                          precision=precision)
+        state = algo.init(params, cfg)
+        step = jax.jit(algo.make_step(loss_fn, cfg))
+        for i in range(30):
+            state, m = step(state, replica_batches(task, i, 64, 2))
+        finals[precision] = (float(m["loss"]),
+                             jax.tree.map(np.asarray,
+                                          algo.deployable(state)))
+    f32_loss, bf16_loss = finals["f32"][0], finals["bf16"][0]
+    assert abs(f32_loss - bf16_loss) < 0.15, (f32_loss, bf16_loss)
+    for a, b in zip(jax.tree_util.tree_leaves(finals["f32"][1]),
+                    jax.tree_util.tree_leaves(finals["bf16"][1])):
+        np.testing.assert_allclose(a, b, atol=0.08)
+
+
+def test_bf16_checkpoint_roundtrip_exact():
+    """bf16 leaves survive the npz round-trip bit-exactly (stored as
+    their uint16 bit pattern — np.savez cannot encode ml_dtypes)."""
+    cfg = _cfg()
+    algo = registry.get("parle")
+    state = algo.init(_params(jax.random.PRNGKey(5)), cfg)
+    step = jax.jit(algo.make_step(_loss, cfg))
+    batch = {"t": jax.random.normal(jax.random.PRNGKey(6), (2, 74))}
+    for _ in range(4):
+        state, _ = step(state, batch)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bf16.npz")
+        ckpt.save(path, state, step=4, algo="parle")
+        restored = ckpt.restore(path, algo.init(_params(
+            jax.random.PRNGKey(5)), cfg), algo="parle")
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    # training continues from the restored state
+    restored, m = step(restored, batch)
+    assert np.isfinite(float(m["loss"]))

@@ -66,7 +66,8 @@ def test_sync_kernel_pytree_leafwise():
     xbar = mk(ks[3], ())
     want = jax.tree.map(
         lambda *ls: ref.parle_sync_update(*ls, **SCALARS), x, z, v, xbar)
-    got_x, got_v = ops.parle_sync_update(x, z, v, xbar, **SCALARS)
+    got_x, got_v, got_y = ops.parle_sync_update(x, z, v, xbar, **SCALARS)
+    assert got_y is got_x          # f32 compute: y' IS x' (no extra pass)
     np.testing.assert_allclose(np.asarray(want["a"][0]),
                                np.asarray(got_x["a"]), rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(want["nested"]["b"][1]),
