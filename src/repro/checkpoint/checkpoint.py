@@ -107,6 +107,22 @@ def restore(path: str, like: Any, algo: str | None = None) -> Any:
                     "restore with a matching-precision state (e.g. "
                     "--precision bf16)")
             arr = arr.view(jnp.bfloat16)
+        # validate per leaf, naming the offending key — without this a
+        # shape drift (different arch/replica count) or a dtype drift
+        # (f32 checkpoint into a bf16 template) restores silently and
+        # fails far away, as a shard error or a quietly-f32 hot path
+        like_shape = tuple(getattr(leaf, "shape", ()))
+        if tuple(arr.shape) != like_shape:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} "
+                f"but the restore template expects {like_shape} — "
+                f"checkpoint from a different --arch/--replicas/config?")
+        if arr.dtype != like_dtype:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has dtype {arr.dtype} but the "
+                f"restore template expects {like_dtype}; restore with a "
+                f"matching-precision state (a float32 checkpoint does "
+                f"not restore into a --precision bf16 template)")
         ordered[i] = jnp.asarray(arr)
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
 

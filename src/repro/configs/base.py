@@ -179,6 +179,19 @@ class ParleConfig:
     # quantization error telescopes away over repeated syncs).  Honored
     # by parle/entropy_sgd (the per-L sync); elastic_sgd/sgd ignore it.
     sync_compress: str = "none"
+    # Staleness-1 overlapped sync (fused rounds only): round k's Eq. (8d)
+    # collective of the (optionally compressed) x+e payload is ISSUED at
+    # the start of round k — before the L inner steps, whose scan does
+    # not depend on it — and its consensus update is APPLIED at the start
+    # of round k+1, carried in ParleState.c.  The collective overlaps the
+    # round's compute instead of barriering after it.  Because x is
+    # constant between syncs, the applied consensus equals the barrier
+    # path's xbar exactly — only the program boundaries rotate — so a
+    # trajectory of R overlap rounds plus one flush (the round factory's
+    # paired flush fn) equals R barrier rounds.  Honored by parle/
+    # entropy_sgd with --round-fused; ignored by the per-step path and by
+    # elastic_sgd/sgd.
+    sync_overlap: bool = False
 
     def scoping_factor(self) -> float:
         return 1.0 - 1.0 / (2.0 * self.batches_per_epoch)

@@ -31,7 +31,21 @@ registered object (see :mod:`repro.core.registry`) exposing
                                 "losses" (L,).  With a mesh, replica-
                                 sharded like make_sharded_step (see the
                                 per-module docstrings for the jax
-                                0.4.37 composed-mesh scan workaround)
+                                0.4.37 composed-mesh scan workaround).
+                                With cfg.sync_overlap (parle/
+                                entropy_sgd) the returned round is the
+                                staleness-1 overlapped variant: the
+                                Eq. (8d) collective is issued at the
+                                round's START and applied at the start
+                                of the NEXT round (core/parle.py)
+  make_round_flush_fn(cfg, *, lr_schedule=None)
+                             -> flush(state) -> state, or None: only
+                                non-None for algorithms/configs whose
+                                rounds leave work in flight
+                                (cfg.sync_overlap).  Apply it ONCE
+                                after the last round, before eval /
+                                deployable — never to a state that will
+                                be checkpointed and resumed
   state_pspecs(replica_axis, params=None, mesh=None, cfg=None)
                              -> PartitionSpec tree for State: the
                                 replica-axis prefix form without
@@ -88,6 +102,8 @@ class Algorithm(Protocol):
                       replica_axis: str = "replica",
                       weight_decay: float = 0.0, use_kernel: bool = False,
                       lr_schedule=None): ...
+
+    def make_round_flush_fn(self, cfg, *, lr_schedule=None): ...
 
     def state_pspecs(self, replica_axis: str, params=None, mesh=None,
                      cfg=None): ...
@@ -147,6 +163,15 @@ class ParleAlgorithm:
                       replica_axis="replica", weight_decay=0.0,
                       use_kernel=False, lr_schedule=None):
         sched = resolve_lr_schedule(cfg, lr_schedule)
+        if getattr(cfg, "sync_overlap", False):
+            if mesh is None:
+                return parle.make_overlap_round_fn(
+                    loss_fn, cfg, weight_decay=weight_decay,
+                    use_kernel=use_kernel, lr_schedule=sched)
+            return parle.make_sharded_overlap_round_fn(
+                loss_fn, cfg, mesh, replica_axis=replica_axis,
+                weight_decay=weight_decay, use_kernel=use_kernel,
+                lr_schedule=sched)
         if mesh is None:
             return parle.make_round_fn(
                 loss_fn, cfg, weight_decay=weight_decay,
@@ -155,6 +180,13 @@ class ParleAlgorithm:
             loss_fn, cfg, mesh, replica_axis=replica_axis,
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=sched)
+
+    def make_round_flush_fn(self, cfg, *, lr_schedule=None):
+        if not getattr(cfg, "sync_overlap", False):
+            return None
+        return parle.make_flush_fn(cfg,
+                                   lr_schedule=resolve_lr_schedule(
+                                       cfg, lr_schedule))
 
     def state_pspecs(self, replica_axis: str, params=None, mesh=None,
                      cfg=None):
@@ -192,6 +224,9 @@ class EntropySGDAlgorithm(ParleAlgorithm):
     def make_round_fn(self, loss_fn, cfg, **kw):
         return super().make_round_fn(loss_fn, self.canonicalize_cfg(cfg),
                                      **kw)
+
+    def make_round_flush_fn(self, cfg, **kw):
+        return super().make_round_flush_fn(self.canonicalize_cfg(cfg), **kw)
 
     def make_sharded_step(self, loss_fn, cfg, mesh, replica_axis="replica",
                           **kw):
@@ -245,6 +280,10 @@ class ElasticSGDAlgorithm:
             loss_fn, cfg, mesh, replica_axis=replica_axis,
             weight_decay=weight_decay, use_kernel=use_kernel,
             lr_schedule=sched)
+
+    def make_round_flush_fn(self, cfg, *, lr_schedule=None):
+        del cfg, lr_schedule    # per-step coupling: nothing in flight
+        return None
 
     def state_pspecs(self, replica_axis: str, params=None, mesh=None,
                      cfg=None):
@@ -303,6 +342,10 @@ class SGDAlgorithm:
         return sgd.make_sharded_round_fn(
             loss_fn, cfg, mesh, replica_axis=replica_axis,
             weight_decay=weight_decay, lr_schedule=sched)
+
+    def make_round_flush_fn(self, cfg, *, lr_schedule=None):
+        del cfg, lr_schedule    # grads averaged every step: no sync debt
+        return None
 
     def state_pspecs(self, replica_axis: str, params=None, mesh=None,
                      cfg=None):

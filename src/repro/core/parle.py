@@ -49,7 +49,11 @@ class ParleState(NamedTuple):
     error-feedback residual of the compressed sync (cfg.sync_compress
     in {"bf16","int8"}), float32, same shape as ``x``; None otherwise
     (an absent pytree subtree, so tree structure only changes when the
-    feature is on)."""
+    feature is on).  ``c`` is the in-flight staleness-1 consensus of the
+    overlapped sync (cfg.sync_overlap): the reduced Eq. (8d) replica
+    mean issued by the CURRENT round and applied at the start of the
+    next one — model-shaped f32 leaves with no replica axis (like
+    elastic's ``ref``); None when overlap is off."""
 
     x: Any            # (n, ...) replicas x^a                 [f32 master]
     y: Any            # (n, ...) inner Entropy-SGD iterate    [compute dtype]
@@ -59,6 +63,7 @@ class ParleState(NamedTuple):
     step: jnp.ndarray  # () int32, counts inner steps k
     scopes: Scopes
     e: Any = None     # (n, ...) sync-compression error-feedback residual
+    c: Any = None     # (...) in-flight staleness-1 consensus (sync_overlap)
 
 
 def _compute_dtype(cfg):
@@ -70,6 +75,10 @@ def _sync_compress(cfg) -> str:
     method = getattr(cfg, "sync_compress", "none")
     compress.check_method(method)
     return method
+
+
+def _sync_overlap(cfg) -> bool:
+    return bool(getattr(cfg, "sync_overlap", False))
 
 
 def init(params, cfg) -> ParleState:
@@ -91,6 +100,10 @@ def init_from_replicas(replica_params, cfg) -> ParleState:
         step=jnp.zeros((), jnp.int32),
         scopes=init_scopes(cfg),
         e=tree_zeros_like(x) if _sync_compress(cfg) != "none" else None,
+        # placeholder until the first overlap round issues a real
+        # consensus — never applied (the apply is gated on step > 0)
+        c=jax.tree.map(lambda l: jnp.zeros(l.shape[1:], jnp.float32), x)
+        if _sync_overlap(cfg) else None,
     )
 
 
@@ -239,44 +252,21 @@ def _quantized_sync_stats(x, e, method: str, axis_name, use_kernel: bool,
     return un(treedef, xbars), un(treedef, e_news)
 
 
-def sync_step(state: ParleState, cfg, axis_name: str | None = None,
-              use_kernel: bool = False, lr_scale=1.0,
-              shard_ctx=None) -> ParleState:
+def consensus_step(state: ParleState, xbar, cfg, *,
+                   use_kernel: bool = False, lr_scale=1.0,
+                   shard_ctx=None, payload=None) -> ParleState:
+    """The Eq. (8c)-(8d) consensus update given an ALREADY-reduced
+    ``xbar`` (un-broadcast model-shaped leaves — the replica mean the
+    collective produced), plus the inner-loop reset and the Eq. (9)
+    scope decay.  ``payload``: alternative (q_tree, s_tree) gathered
+    int8 payloads for the fused dequantize+mean+update kernel (the
+    barrier kernel_compress path).  ``e``, ``c`` and ``step`` pass
+    through untouched — the caller owns them (the barrier sync updates
+    ``e`` from its stats; the overlapped head updates both ``e`` and
+    ``c`` from the NEXT payload)."""
     mu, lr = cfg.momentum, cfg.lr * lr_scale
     inv_rho = 1.0 / state.scopes.rho
-    method = _sync_compress(cfg)
     cdtype = _compute_dtype(cfg)
-
-    # (8d) with eta'' = rho/n: the reference IS the replica mean.
-    # Local path: leading-axis mean.  shard_map path (axis_name given):
-    # the global n replicas are laid out as (devices, n_per_device), so
-    # the global mean = pmean over the mesh axis of the LOCAL leading-
-    # axis mean — still exactly one all-reduce, of model-size bytes,
-    # regardless of how many replicas ride each device.  With
-    # cfg.sync_compress the payload is quantized per replica and the
-    # collective becomes an all_gather of the compressed bytes.
-    e_new = state.e
-    xbar = payload = None
-    # the fused dequantize+mean+update kernel consumes the raw int8
-    # payloads; the planner-sharded path (shard_ctx) sticks to the jnp
-    # compression + per-shard update kernels
-    kernel_compress = (use_kernel and shard_ctx is None
-                       and method == "int8")
-    if method != "none":
-        stats, e_new = _quantized_sync_stats(
-            state.x, state.e, method, axis_name,
-            use_kernel and shard_ctx is None,
-            return_payload=kernel_compress, shard_ctx=shard_ctx)
-        if kernel_compress:
-            payload = stats
-        else:
-            xbar = stats
-    elif axis_name is None:
-        xbar = tree_mean_axis0(state.x)
-    else:
-        xbar = jax.tree.map(lambda v: jax.lax.pmean(jnp.mean(v, axis=0),
-                                                    axis_name), state.x)
-
     gamma_scale = 1.0 if cfg.scale_lr_by_gamma else 1.0 / state.scopes.gamma
 
     if use_kernel:
@@ -309,14 +299,60 @@ def sync_step(state: ParleState, cfg, axis_name: str | None = None,
         x, v_x = tree_unzip(state.x, out, 2)
         y = tree_cast(x, cdtype)         # f32: the identity (y is x)
 
-    return ParleState(
+    return state._replace(
         x=x, y=y, z=x,                    # reset y,z to x^a (paper: "we
         v_y=tree_zeros_like(x),           # initialize y to x every L")
         v_x=v_x,
-        step=state.step,
         scopes=update_scopes(state.scopes, cfg),
-        e=e_new,
     )
+
+
+def _sync_stats(state: ParleState, cfg, axis_name, use_kernel, shard_ctx):
+    """The Eq. (8d) replica mean of the (optionally compressed) ``x+e``
+    payload — the collective half of the sync, shared by the barrier
+    sync and the overlapped head.  Returns (xbar, payload, e_new):
+    exactly one of xbar (reduced model-shaped leaves) / payload
+    (gathered (q, s) int8 trees for the fused kernel) is non-None."""
+    method = _sync_compress(cfg)
+    e_new, xbar, payload = state.e, None, None
+    # the fused dequantize+mean+update kernel consumes the raw int8
+    # payloads; the planner-sharded path (shard_ctx) sticks to the jnp
+    # compression + per-shard update kernels
+    kernel_compress = (use_kernel and shard_ctx is None
+                       and method == "int8")
+    if method != "none":
+        stats, e_new = _quantized_sync_stats(
+            state.x, state.e, method, axis_name,
+            use_kernel and shard_ctx is None,
+            return_payload=kernel_compress, shard_ctx=shard_ctx)
+        if kernel_compress:
+            payload = stats
+        else:
+            xbar = stats
+    elif axis_name is None:
+        xbar = tree_mean_axis0(state.x)
+    else:
+        xbar = jax.tree.map(lambda v: jax.lax.pmean(jnp.mean(v, axis=0),
+                                                    axis_name), state.x)
+    return xbar, payload, e_new
+
+
+def sync_step(state: ParleState, cfg, axis_name: str | None = None,
+              use_kernel: bool = False, lr_scale=1.0,
+              shard_ctx=None) -> ParleState:
+    # (8d) with eta'' = rho/n: the reference IS the replica mean.
+    # Local path: leading-axis mean.  shard_map path (axis_name given):
+    # the global n replicas are laid out as (devices, n_per_device), so
+    # the global mean = pmean over the mesh axis of the LOCAL leading-
+    # axis mean — still exactly one all-reduce, of model-size bytes,
+    # regardless of how many replicas ride each device.  With
+    # cfg.sync_compress the payload is quantized per replica and the
+    # collective becomes an all_gather of the compressed bytes.
+    xbar, payload, e_new = _sync_stats(state, cfg, axis_name, use_kernel,
+                                       shard_ctx)
+    return consensus_step(state._replace(e=e_new), xbar, cfg,
+                          use_kernel=use_kernel, lr_scale=lr_scale,
+                          shard_ctx=shard_ctx, payload=payload)
 
 
 def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
@@ -333,6 +369,117 @@ def fused_step(state: ParleState, grads, cfg, use_kernel: bool = False,
                                             shard_ctx=shard_ctx),
                         lambda s: s,
                         state)
+
+
+# ------------------------------------------------------------------
+# Staleness-1 overlapped sync (cfg.sync_overlap): the Eq. (8d)
+# collective is issued at the START of a round — before the L inner
+# steps, which do not consume it — and applied at the start of the NEXT
+# round, carried in ParleState.c.  Because x only changes at the
+# consensus update, the payload snapshotted right after the apply equals
+# the barrier path's end-of-round x exactly: the overlapped trajectory
+# is the barrier trajectory with rotated program boundaries, and R
+# overlap rounds + one flush reproduce R barrier rounds bit-for-bit on
+# the f32 local/replica-sharded paths.
+# ------------------------------------------------------------------
+
+def overlap_head(state: ParleState, cfg, axis_name: str | None = None,
+                 use_kernel: bool = False, lr_scale=1.0,
+                 shard_ctx=None) -> ParleState:
+    """The overlapped round's head: (1) apply the carried consensus
+    ``state.c`` (gated on step > 0 — the first round has nothing in
+    flight), (2) snapshot + (optionally compress) the NEW x+e as the
+    next payload, issue its collective, update the error-feedback
+    residual, and carry the reduced mean in ``c``.  ``lr_scale`` is the
+    apply's outer-lr multiplier — schedule(step - 1), the same value
+    the barrier sync it replays would have used."""
+    method = _sync_compress(cfg)
+    if use_kernel and shard_ctx is None and method == "int8":
+        return _overlap_head_fused(state, cfg, axis_name, lr_scale)
+    applied = jax.lax.cond(
+        state.step > 0,
+        lambda s: consensus_step(s, s.c, cfg, use_kernel=use_kernel,
+                                 lr_scale=lr_scale, shard_ctx=shard_ctx),
+        lambda s: s, state)
+    xbar, payload, e_new = _sync_stats(applied, cfg, axis_name, use_kernel,
+                                       shard_ctx)
+    assert payload is None        # the fused int8 path returned above
+    return applied._replace(e=e_new, c=xbar)
+
+
+def _overlap_head_fused(state: ParleState, cfg, axis_name,
+                        lr_scale) -> ParleState:
+    """The use_kernel int8 head: consensus apply + next-payload int8
+    quantize+EF fused into ONE memory pass (kernels/parle_update.py::
+    parle_apply_quantize_flat — the overlap counterpart of the barrier's
+    fused dequantize+mean+update kernel).  The first round (nothing in
+    flight) quantizes the initial x without applying."""
+    from repro.kernels import ops as kops
+    mu, lr = cfg.momentum, cfg.lr * lr_scale
+    inv_rho = 1.0 / state.scopes.rho
+    cdtype = _compute_dtype(cfg)
+    gamma_scale = 1.0 if cfg.scale_lr_by_gamma else 1.0 / state.scopes.gamma
+
+    def apply_quant(s):
+        x, v_x, y, q, sc, e = kops.parle_apply_consensus_quantize(
+            s.x, s.z, s.v_x, s.c, s.e, gamma_scale=gamma_scale,
+            inv_rho=inv_rho, lr=lr, mu=mu, y_dtype=cdtype)
+        s = s._replace(x=x, y=y, z=x, v_y=tree_zeros_like(x), v_x=v_x,
+                       scopes=update_scopes(s.scopes, cfg), e=e)
+        return s, (q, sc)
+
+    def quant_only(s):
+        flat, treedef = jax.tree_util.tree_flatten(s.x)
+        flat_e = treedef.flatten_up_to(s.e)
+        qs, ss, es = [], [], []
+        for xl, el in zip(flat, flat_e):
+            r, shape, m = xl.shape[0], xl.shape, xl[0].size
+            cpad = compress.pad_to_chunk(
+                (xl.astype(jnp.float32) + el).reshape(r, -1))
+            q, sc, res = kops.quantize_ef(cpad)
+            qs.append(q)
+            ss.append(sc)
+            es.append(res[:, :m].reshape(shape))
+        un = jax.tree_util.tree_unflatten
+        return (s._replace(e=un(treedef, es)),
+                (un(treedef, qs), un(treedef, ss)))
+
+    state, (q, sc) = jax.lax.cond(state.step > 0, apply_quant, quant_only,
+                                  state)
+
+    def reduce_leaf(xl, ql, sl):
+        if axis_name is not None:
+            ql = jax.lax.all_gather(ql, axis_name, axis=0, tiled=True)
+            sl = jax.lax.all_gather(sl, axis_name, axis=0, tiled=True)
+        deq = compress.dequantize(ql, sl, "int8")
+        return jnp.mean(deq, axis=0)[:xl[0].size].reshape(xl.shape[1:])
+
+    c_new = jax.tree.map(reduce_leaf, state.x, q, sc)
+    return state._replace(c=c_new)
+
+
+def make_flush_fn(cfg, lr_schedule=None):
+    """flush(state) -> state: apply the still-in-flight consensus after
+    the LAST overlap round, completing the rotation — the flushed state
+    equals the barrier trajectory's.  Gated on step > 0 (a never-run
+    state flushes to itself).  Pure elementwise (the collective already
+    ran), so one GSPMD jit covers every mesh layout; always the jnp
+    apply (bit-identical to the interpret-mode kernel).
+
+    Call exactly once, on the state you are about to evaluate or
+    deploy; checkpoints written at round boundaries stay PRE-flush so
+    resuming continues the overlapped trajectory exactly (flushing a
+    checkpointed state and then resuming from it would double-apply)."""
+
+    def flush(state):
+        lr_scale = (lr_schedule(state.step - 1) if lr_schedule is not None
+                    else 1.0)
+        return jax.lax.cond(
+            state.step > 0,
+            lambda s: consensus_step(s, s.c, cfg, lr_scale=lr_scale),
+            lambda s: s, state)
+
+    return jax.jit(flush)
 
 
 # ------------------------------------------------------------------
@@ -621,6 +768,158 @@ def make_sharded_round_fn(loss_fn: Callable, cfg, mesh,
     def round_fn(state, batches):
         state, losses = inner_jit(state, batches)
         state = sync_jit(state)
+        return state, {"loss": jnp.mean(losses), "losses": losses,
+                       "gamma": state.scopes.gamma,
+                       "rho": state.scopes.rho, "step": state.step}
+
+    return round_fn
+
+
+# ------------------------------------------------------------------
+# Overlapped rounds (cfg.sync_overlap): head-first program rotation
+# ------------------------------------------------------------------
+
+def _make_overlap_round_body(loss_fn: Callable, cfg, weight_decay: float,
+                             use_kernel: bool, axis_name: str | None,
+                             lr_schedule=None, shard_ctx=None):
+    """One staleness-1 overlapped round: :func:`overlap_head` (apply the
+    carried consensus, issue this round's collective) then the L inner
+    steps.  The scan carry deliberately EXCLUDES ``c`` and ``e``: the
+    inner steps never read them, and keeping the collective's result out
+    of the while loop's operands is what frees the latency-hiding
+    scheduler to run the collective concurrently with the scan — a
+    carried ``c`` would make the loop's input depend on it, a barrier in
+    dataflow.  Same entry invariants and metric contract as
+    :func:`_make_round_body`; per-round losses are bit-identical to the
+    barrier round's (the scan starts from the same post-consensus
+    state), and the output state trails it by exactly the in-flight
+    ``c`` (see :func:`make_flush_fn`)."""
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def round_fn(state: ParleState, batches):
+        apply_scale = (lr_schedule(state.step - 1)
+                       if lr_schedule is not None else 1.0)
+        head = overlap_head(state, cfg, axis_name=axis_name,
+                            use_kernel=use_kernel, lr_scale=apply_scale,
+                            shard_ctx=shard_ctx)
+
+        def body(s, b):
+            losses, grads = jax.vmap(replica_grad)(s.y, b)
+            if weight_decay:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                     grads, s.y)
+            lr_scale = (lr_schedule(s.step) if lr_schedule is not None
+                        else 1.0)
+            s = inner_step(s, grads, cfg, use_kernel=use_kernel,
+                           lr_scale=lr_scale, shard_ctx=shard_ctx)
+            loss = jnp.mean(losses)
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            return s, loss
+
+        inner, losses = jax.lax.scan(body, head._replace(c=None, e=None),
+                                     batches)
+        state = inner._replace(c=head.c, e=head.e)
+        metrics = {"loss": jnp.mean(losses), "losses": losses,
+                   "gamma": state.scopes.gamma, "rho": state.scopes.rho,
+                   "step": state.step}
+        return state, metrics
+
+    return round_fn
+
+
+def make_overlap_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                          use_kernel: bool = False, lr_schedule=None):
+    """Local (vmap-replica) overlapped round; same donation contract as
+    :func:`make_round_fn`.  Pair with :func:`make_flush_fn` to
+    materialize the final consensus after the last round."""
+    body = _make_overlap_round_body(loss_fn, cfg, weight_decay, use_kernel,
+                                    axis_name=None, lr_schedule=lr_schedule)
+    return jax.jit(body, donate_argnums=(0,))
+
+
+def make_sharded_overlap_round_fn(loss_fn: Callable, cfg, mesh,
+                                  replica_axis: str = "replica",
+                                  weight_decay: float = 0.0,
+                                  use_kernel: bool = False,
+                                  lr_schedule=None):
+    """Distributed overlapped round.
+
+    Replica-only meshes: one fully-manual shard_map program, like the
+    barrier round — but with the collective FIRST and the scan after it,
+    so the all-gather / all-reduce sits before the while loop in the
+    schedule instead of on the critical path behind it.
+
+    Composed meshes split head and scan into separate programs (the
+    rotated form of the barrier path's jax 0.4.37 workaround — see
+    :func:`make_sharded_round_fn`): the head runs under the partial-
+    manual shard_map (cond'd apply + explicit collective, no scan), the
+    L inner steps as pure-GSPMD jit.  Same float-tolerance contract as
+    the composed barrier round."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import planner
+    from repro.sharding.partition import parle_state_pspecs
+    from repro.utils.compat import shard_map
+
+    axis_name = replica_axis if mesh.shape[replica_axis] > 1 else None
+    specs = parle_state_pspecs(replica_axis, cfg=cfg)
+    metric_specs = {"loss": P(), "losses": P(), "gamma": P(), "rho": P(),
+                    "step": P()}
+    n_dev = mesh.shape[replica_axis]
+    if cfg.n_replicas % n_dev != 0:
+        raise ValueError(
+            f"n_replicas={cfg.n_replicas} not divisible by "
+            f"mesh axis {replica_axis!r} of size {n_dev}")
+
+    if not planner.in_replica_axes(mesh, replica_axis):
+        body = _make_overlap_round_body(loss_fn, cfg, weight_decay,
+                                        use_kernel, axis_name=axis_name,
+                                        lr_schedule=lr_schedule)
+        return jax.jit(shard_map(body, mesh,
+                                 in_specs=(specs, P(None, replica_axis)),
+                                 out_specs=(specs, metric_specs)),
+                       donate_argnums=(0,))
+
+    shard_ctx = planner.make_shard_context(mesh, replica_axis)
+    auto = frozenset(planner.in_replica_axes(mesh, replica_axis))
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def head_body(state):
+        apply_scale = (lr_schedule(state.step - 1)
+                       if lr_schedule is not None else 1.0)
+        return overlap_head(state, cfg, axis_name=axis_name,
+                            use_kernel=use_kernel, lr_scale=apply_scale,
+                            shard_ctx=shard_ctx)
+
+    def inner_scan(state, batches):
+        def scan_body(s, b):
+            losses, grads = jax.vmap(replica_grad)(s.y, b)
+            if weight_decay:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                     grads, s.y)
+            lr_scale = (lr_schedule(s.step) if lr_schedule is not None
+                        else 1.0)
+            s = inner_step(s, grads, cfg, use_kernel=False,
+                           lr_scale=lr_scale)
+            return s, jnp.mean(losses)
+
+        return jax.lax.scan(scan_body, state, batches)
+
+    head_jit = jax.jit(shard_map(head_body, mesh, in_specs=(specs,),
+                                 out_specs=specs, auto=auto),
+                       donate_argnums=(0,))
+    inner_jit = jax.jit(inner_scan, donate_argnums=(0,))
+
+    def round_fn(state, batches):
+        state = head_jit(state)
+        state, losses = inner_jit(state, batches)
         return state, {"loss": jnp.mean(losses), "losses": losses,
                        "gamma": state.scopes.gamma,
                        "rho": state.scopes.rho, "step": state.step}

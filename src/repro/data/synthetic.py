@@ -36,6 +36,7 @@ class TokenStream:
     seed: int = 0
     num_codebooks: int = 0        # audio: emit (B, K, T)
     shard: tuple[int, int] = (0, 1)   # (index, count) — replica split
+    split: bool = False           # True: draw ONLY from shard's key block
 
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
@@ -47,14 +48,22 @@ class TokenStream:
         idx, cnt = self.shard
         return _token_batch(step, idx, cnt, self.seed, self.batch_size,
                             self.seq_len, self.vocab_size,
-                            self.num_codebooks)
+                            self.num_codebooks, split=self.split)
 
 
 def _token_batch(step, idx, cnt, seed, batch_size, seq_len, vocab_size,
-                 num_codebooks):
+                 num_codebooks, split=False):
     """Body of :meth:`TokenStream.batch`, traceable in ``step`` (the
-    fused-round batch stager jits/vmaps it over a whole round)."""
-    key = jax.random.PRNGKey(seed * 100003 + step * cnt + idx)
+    fused-round batch stager jits/vmaps it over a whole round).
+
+    The PRNG index IS the sample identity of this synthetic stream, so
+    data splitting (paper §5) is a partition of the key space:
+    split=True gives shard ``idx`` its own disjoint 2^20-wide key block
+    — no sample is ever drawn by two shards; split=False interleaves
+    all shards through the full stream (decorrelated draws from the
+    same data — every shard can see every sample)."""
+    base_idx = idx * (1 << 20) + step if split else step * cnt + idx
+    key = jax.random.PRNGKey(seed * 100003 + base_idx)
     shape = ((batch_size, num_codebooks, seq_len + 1) if num_codebooks
              else (batch_size, seq_len + 1))
     base = jax.random.randint(key, shape, 0, vocab_size)
@@ -132,28 +141,34 @@ def replica_batches(task_or_stream, step: int, batch_size: int, n_replicas: int,
                                            batch_size, shard)
         else:
             s = task_or_stream
+            # split=False keeps every replica's draws interleaved through
+            # the full stream (shard index a decorrelates them);
+            # split=True switches the key derivation to per-shard
+            # disjoint blocks — the shard tuple alone does NOT split a
+            # token stream (both modes walk all of it otherwise)
             s2 = TokenStream(s.vocab_size, s.seq_len, batch_size,
                              seed=s.seed, num_codebooks=s.num_codebooks,
-                             shard=shard if split else (a, n_replicas))
+                             shard=(a, n_replicas), split=split)
             b = s2.batch(step)
         outs.append(b)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
 
 def make_round_batch_fn(stream: TokenStream, L: int, batch_size: int,
-                        n_replicas: int):
+                        n_replicas: int, split: bool = False):
     """Staging for fused L-step rounds: ONE jitted dispatch builds all
     L x n batches of a round — (L, n, B, T) leaves, bit-identical to
-    stacking :func:`replica_batches` per step (regression-tested in
-    tests/test_round_fused.py).  The per-step dispatch loop pays ~20
-    un-jitted host ops per step for the same work; the round driver
-    double-buffers this call against the round's device compute."""
+    stacking :func:`replica_batches` per step IN EITHER SPLIT MODE
+    (regression-tested in tests/test_round_fused.py).  The per-step
+    dispatch loop pays ~20 un-jitted host ops per step for the same
+    work; the round driver double-buffers this call against the round's
+    device compute."""
     n = n_replicas
 
     def one(step, a):
         return _token_batch(step, a, n, stream.seed, batch_size,
                             stream.seq_len, stream.vocab_size,
-                            stream.num_codebooks)
+                            stream.num_codebooks, split=split)
 
     @jax.jit
     def stage(start_step):

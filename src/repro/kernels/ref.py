@@ -91,6 +91,19 @@ def parle_sync_dequant_update(x, z, v, q, s, *, gamma_scale, inv_rho,
                              inv_rho=inv_rho, lr=lr, mu=mu)
 
 
+def parle_apply_quantize(x, z, v, c, e, *, gamma_scale, inv_rho, lr, mu):
+    """Oracle of the fused apply-stale-consensus + quantize kernel
+    (staleness-1 overlap head): parle_sync_update with the CARRIED mean
+    ``c``, then int8 quantize_ef of the new payload x' + e.
+
+    x, z, v, e: (R, M); c: (M,).  Returns (x', v', q, s, e')."""
+    x_new, v_new = parle_sync_update(x, z, v, c[None],
+                                     gamma_scale=gamma_scale,
+                                     inv_rho=inv_rho, lr=lr, mu=mu)
+    q, s, e_new = quantize_ef(x_new + e)
+    return x_new, v_new, q, s, e_new
+
+
 # ------------------------------------------------------------------
 # flash_attention: causal (optionally sliding-window) MHA
 # ------------------------------------------------------------------

@@ -122,6 +122,64 @@ def collective_bytes(hlo_text: str, scope: str = "all") -> dict:
             "total_bytes": sum(out.values())}
 
 
+def overlap_structure(hlo_text: str) -> dict:
+    """Dataflow relation of each ENTRY-computation collective to the
+    entry while loop (a fused round's inner scan) — the structural
+    statement of --sync-overlap, independent of wall-clock noise.
+
+    A barrier round's Eq. 8d all-reduce CONSUMES the while loop's
+    result ("after_loop": strictly serialized behind the compute).  An
+    overlapped round's all-reduce neither feeds nor consumes the loop
+    ("independent_of_loop": the scheduler is free to run it under the
+    loop's compute; only the NEXT round reads its result).
+
+    Returns {"collectives", "while_loops", "after_loop", "before_loop",
+    "independent_of_loop", "loop_overlappable"} where loop_overlappable
+    means no collective is serialized behind the loop.
+    """
+    entry = entry_computation(hlo_text)
+    deps: dict = {}
+    colls, whiles = [], []
+    for line in entry.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        deps[name] = set(_OPERAND_RE.findall(rhs))
+        if re.search(r"\bwhile\(", rhs):
+            whiles.append(name)
+            continue
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                colls.append(name)
+                break
+
+    def reaches(src, dst):      # dst transitively depends on src?
+        seen, stack = set(), [dst]
+        while stack:
+            cur = stack.pop()
+            if cur == src:
+                return True
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(deps.get(cur, ()))
+        return False
+
+    after = before = indep = 0
+    for c in colls:
+        if any(reaches(w, c) for w in whiles):
+            after += 1
+        elif any(reaches(c, w) for w in whiles):
+            before += 1
+        else:
+            indep += 1
+    return {"collectives": len(colls), "while_loops": len(whiles),
+            "after_loop": after, "before_loop": before,
+            "independent_of_loop": indep,
+            "loop_overlappable": bool(colls) and after == 0}
+
+
 # ------------------------------------------------------------------
 # Per-axis accounting: which MESH AXIS does each collective ride?
 # ------------------------------------------------------------------

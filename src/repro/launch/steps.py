@@ -67,6 +67,17 @@ def make_algorithm_round(algo_name: str, cfg, pcfg, mesh=None,
         lr_schedule=lr_schedule)
 
 
+def make_algorithm_round_flush(algo_name: str, pcfg, lr_schedule=None):
+    """The end-of-training pairing of the sync-overlap round: a jitted
+    flush(state) -> state that applies the in-flight staleness-1
+    consensus once, or None when the algo/config has nothing in flight
+    (barrier sync, elastic_sgd, sgd).  Call it on the FINAL state before
+    eval/deploy — never on a state that will be checkpointed and resumed
+    (the resumed overlap loop applies the carry itself)."""
+    return registry.get(algo_name).make_round_flush_fn(
+        pcfg, lr_schedule=lr_schedule)
+
+
 def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,
                      use_flash: bool = False, remat: bool = False,
                      use_kernel: bool = False):

@@ -68,6 +68,14 @@ def build_argparser():
                          "entropy_sgd): bf16 halves, int8 (per-chunk "
                          "scales + error-feedback residual in the state) "
                          "quarters the wire bytes")
+    ap.add_argument("--sync-overlap", action="store_true",
+                    help="staleness-1 overlapped sync (parle/entropy_sgd "
+                         "with --round-fused): issue each round's Eq. 8d "
+                         "collective BEFORE its inner steps and apply the "
+                         "consensus at the start of the next round, so "
+                         "the collective overlaps compute instead of "
+                         "barriering; the trajectory equals the barrier "
+                         "path's after the end-of-training flush")
     ap.add_argument("--mesh", default="",
                     help="shard replicas over a device mesh, e.g. "
                          "'replica:4' or 'replica:2,data:2,model:2'; parle "
@@ -96,6 +104,14 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}")
+    if args.sync_overlap and not args.round_fused:
+        raise SystemExit("--sync-overlap requires --round-fused (the "
+                         "overlapped collective is issued at fused-round "
+                         "boundaries; the per-step path always barriers)")
+    if args.sync_overlap and args.algo not in ("parle", "entropy_sgd"):
+        raise SystemExit(f"--sync-overlap is a Parle Eq. 8d feature; "
+                         f"--algo {args.algo} has no round-level sync to "
+                         f"overlap")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
@@ -117,8 +133,10 @@ def main(argv=None):
         n_replicas=n, L=args.L, lr=args.lr, lr_inner=args.lr,
         batches_per_epoch=max(args.steps // 4, 1),
         lr_drop_steps=drops, lr_drop_factor=args.lr_drop_factor,
-        precision=args.precision, sync_compress=args.sync_compress))
+        precision=args.precision, sync_compress=args.sync_compress,
+        sync_overlap=args.sync_overlap))
     n = pcfg.n_replicas                 # canonicalized (entropy_sgd -> 1)
+    _validate_replicas(args, pcfg, mesh, raxis)
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                          batch_size=args.batch, seed=args.seed)
 
@@ -182,6 +200,32 @@ def main(argv=None):
     return history
 
 
+def _validate_replicas(args, pcfg, mesh, raxis):
+    """Fail fast with a readable message when --replicas and the mesh
+    replica axis disagree — the shard_map error this preempts names
+    neither flag.  Runs AFTER canonicalize_cfg so the entropy_sgd n->1
+    rewrite is covered: ``--algo entropy_sgd --mesh replica:4`` dies
+    here with the fix spelled out instead of failing divisibility on a
+    count the user never asked for."""
+    if mesh is None:
+        return
+    n_dev = mesh.shape[raxis]
+    n = pcfg.n_replicas
+    if args.replicas and n != args.replicas and n_dev != n:
+        raise SystemExit(
+            f"--algo {args.algo} canonicalizes --replicas "
+            f"{args.replicas} to n_replicas={n}, which does not fit the "
+            f"mesh replica axis {raxis!r} of size {n_dev}; use --algo "
+            f"parle to keep {args.replicas} replicas, or a mesh with "
+            f"{raxis}:{n}")
+    if n % n_dev != 0:
+        raise SystemExit(
+            f"--replicas {n} is not divisible by the mesh replica axis "
+            f"{raxis!r} of size {n_dev} (each device must hold a whole "
+            f"number of replicas); pick a multiple of {n_dev} or resize "
+            f"the mesh")
+
+
 def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
                 start, n, t0):
     """The fused-round driver loop: one donated-buffer compiled program
@@ -204,7 +248,8 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
     round_fn = algo.make_round_fn(model.loss, pcfg, mesh=mesh,
                                   replica_axis=raxis or "replica",
                                   use_kernel=args.use_kernel)
-    stage = make_round_batch_fn(stream, L, args.batch, n)
+    stage = make_round_batch_fn(stream, L, args.batch, n,
+                                split=args.split_data)
     state = dealias_state(state)     # donated rounds need distinct buffers
     log_rounds = max(1, args.log_every // L)
     history = []
@@ -232,6 +277,14 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
                 and gstep // ce > (gstep - L) // ce):
             ckpt.save(f"{args.checkpoint_dir}/step{gstep:06d}.npz", state,
                       step=gstep, meta={"arch": cfg.name}, algo=args.algo)
+    # --sync-overlap leaves the last round's consensus in flight: apply
+    # it once before eval/deploy.  Checkpoints above are intentionally
+    # pre-flush — resumed runs re-enter the overlap loop, which applies
+    # the carried consensus itself (flushing a checkpointed state would
+    # double-apply on resume).
+    flush = algo.make_round_flush_fn(pcfg)
+    if flush is not None:
+        state = flush(state)
     return history, state
 
 

@@ -79,20 +79,27 @@ def parle_state_pspecs(replica_axis: str, params=None,
 
     ``cfg``: when it enables a compressed sync (cfg.sync_compress !=
     "none") the state carries the error-feedback residual ``e`` — same
-    shape and sharding as ``x``; the spec tree must mirror that extra
-    subtree.  Dtype layout note: specs are dtype-agnostic — under
-    cfg.precision="bf16" the ``y`` subtree is bfloat16 and everything
-    else f32, with identical PartitionSpecs."""
+    shape and sharding as ``x``; when it enables the overlapped sync
+    (cfg.sync_overlap) the state carries the in-flight consensus ``c``
+    — model-shaped with NO replica axis, replicated over the replica
+    axis exactly like elastic's ``ref`` (every device applies the same
+    reduced mean to its replicas).  The spec tree must mirror both
+    feature-dependent subtrees.  Dtype layout note: specs are
+    dtype-agnostic — under cfg.precision="bf16" the ``y`` subtree is
+    bfloat16 and everything else f32, with identical PartitionSpecs."""
     from repro.core.parle import ParleState
     has_e = cfg is not None and getattr(cfg, "sync_compress", "none") != "none"
+    has_c = cfg is not None and getattr(cfg, "sync_overlap", False)
     if params is None:
         rep = P(replica_axis)
         return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
-                          step=P(), scopes=P(), e=rep if has_e else None)
+                          step=P(), scopes=P(), e=rep if has_e else None,
+                          c=P() if has_c else None)
     plan = planner_mod.plan_tree(params, mesh=mesh)
     rep = plan.pspecs_with_leading(replica_axis)
     return ParleState(x=rep, y=rep, z=rep, v_y=rep, v_x=rep,
-                      step=P(), scopes=P(), e=rep if has_e else None)
+                      step=P(), scopes=P(), e=rep if has_e else None,
+                      c=plan.pspecs() if has_c else None)
 
 
 def elastic_state_pspecs(replica_axis: str, params=None,
