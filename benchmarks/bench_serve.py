@@ -12,6 +12,19 @@ Methodology (the timing-bugfix contract of this subsystem):
   * the engine's greedy outputs are verified bit-identical to the naive
     loop before anything is recorded (``greedy_exact_match``).
 
+Paged-cache probes (PR 7) ride the same pinned config:
+
+  * ``paged_*`` — the paged engine at EQUAL occupancy (same slots, same
+    workload) vs the dense engine: steady-state decode tokens/s, best
+    of interleaved trials (CPU timing noise), plus exact-match.
+  * ``concurrency_*`` — max concurrent requests at FIXED cache bytes:
+    the dense layout reserves max_len rows per slot; the paged layout
+    reserves ceil(need/page_size) pages per request, so short-budget
+    requests pack >= 2x as many into the same HBM.
+  * ``prefix_*`` — a shared-system-prompt workload (staggered arrivals
+    so the first request publishes its pages): prefix-hit rate > 0
+    with outputs still exact.
+
   PYTHONPATH=src python benchmarks/bench_serve.py          # write JSON
   PYTHONPATH=src python -m benchmarks.run serve            # suite line
 """
@@ -31,8 +44,11 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
 # per-token work dominates python dispatch at the engine's chunk size
 PIN = {"d_model": 128, "num_layers": 2, "d_ff": 256, "vocab": 512,
        "prompt_len": 32, "gen": 64, "max_len": 128,
-       "slots": 8, "decode_chunk": 8,
-       "naive_decode_steps": 64, "engine_chunks": 8}
+       "slots": 8, "decode_chunk": 16,
+       "naive_decode_steps": 64, "engine_chunks": 4,
+       # paged probes
+       "page_size": 16, "prefill_chunk": 32,
+       "concurrency_max_len": 256, "paged_trials": 3}
 
 
 def _cfg():
@@ -135,6 +151,111 @@ def measure_engine(cfg, params) -> dict:
     }
 
 
+def _paged_engine(cfg, params, **kw):
+    from repro.serving import Engine
+    args = dict(num_slots=PIN["slots"], max_len=PIN["max_len"],
+                decode_chunk=PIN["decode_chunk"], paged=True,
+                page_size=PIN["page_size"],
+                prefill_chunk=PIN["prefill_chunk"])
+    args.update(kw)
+    return Engine(cfg, params, **args)
+
+
+def _steady_decode_s(eng):
+    """Admit + prefill everything, then time engine_chunks full-
+    occupancy decode steps (compile + prefill excluded)."""
+    import jax
+    for p in _prompts(cfg_g(), PIN["slots"]):
+        eng.submit(p, max_new_tokens=PIN["max_len"] - PIN["prompt_len"])
+    while len(eng.sched.decoding_slots() if eng.paged
+              else eng.sched.active_slots()) < PIN["slots"]:
+        eng.step()                            # admission + chunked prefill
+    jax.block_until_ready(eng.cur_tok)
+    t0 = time.perf_counter()
+    for _ in range(PIN["engine_chunks"]):
+        eng.step()
+    jax.block_until_ready(eng.cur_tok)
+    assert len(eng.sched.active_slots()) == PIN["slots"], "slots drained"
+    return time.perf_counter() - t0
+
+
+_CFG_CACHE = {}
+
+
+def cfg_g():
+    if "cfg" not in _CFG_CACHE:
+        _CFG_CACHE["cfg"] = _cfg()
+    return _CFG_CACHE["cfg"]
+
+
+def measure_paged_vs_dense(cfg, params) -> dict:
+    """Equal occupancy (same slots, same workload): paged decode
+    tokens/s vs dense, best of interleaved trials."""
+    from repro.serving import Engine
+
+    toks = PIN["engine_chunks"] * PIN["decode_chunk"] * PIN["slots"]
+    dense_s, paged_s = [], []
+    for _ in range(PIN["paged_trials"]):
+        dense_s.append(_steady_decode_s(
+            Engine(cfg, params, num_slots=PIN["slots"],
+                   max_len=PIN["max_len"],
+                   decode_chunk=PIN["decode_chunk"])))
+        paged_s.append(_steady_decode_s(_paged_engine(cfg, params)))
+    dense_tps = toks / min(dense_s)
+    paged_tps = toks / min(paged_s)
+    return {
+        "paged_decode_tokens_per_s": round(paged_tps, 1),
+        "paged_vs_dense_decode_ratio": round(paged_tps / dense_tps, 3),
+    }
+
+
+def measure_concurrency_at_fixed_bytes(cfg, params) -> dict:
+    """Max concurrent requests in the SAME cache HBM: dense reserves
+    max_len rows per slot; paged reserves worst-case pages per request.
+    Verified by running the paged engine and recording peak occupancy."""
+    ml, ps = PIN["concurrency_max_len"], PIN["page_size"]
+    rows = PIN["slots"] * ml                  # dense cache rows (per layer)
+    num_pages = rows // ps + 1                # same rows, + trash page
+    need = PIN["prompt_len"] + PIN["gen"]
+    per_req = -(-need // ps)
+    slots = (num_pages - 1) // per_req        # analytic packing bound
+    eng = _paged_engine(cfg, params, num_slots=slots, max_len=ml,
+                        num_pages=num_pages)
+    for i, p in enumerate(_prompts(cfg, slots)):
+        eng.submit(p, max_new_tokens=PIN["gen"])
+    peak = 0
+    while eng.sched.has_work():
+        eng.step()
+        peak = max(peak, len(eng.sched.active_slots()))
+    return {
+        "concurrency_cache_rows": rows,
+        "concurrency_dense_slots": PIN["slots"],
+        "concurrency_paged_slots": peak,
+        "concurrency_gain": round(peak / PIN["slots"], 2),
+    }
+
+
+def measure_prefix_sharing(cfg, params) -> dict:
+    """Shared-system-prompt workload: request 0 publishes the prefix
+    pages, staggered followers resume past them.  Exactness of the
+    shared path is covered by tests/test_serving_paged.py."""
+    import numpy as np
+    shared = _prompts(cfg, 1)[0]              # the 32-token system prompt
+    n = PIN["slots"]
+    eng = _paged_engine(cfg, params)
+    rng = np.random.default_rng(7)
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+        eng.submit(np.concatenate([shared, tail]), max_new_tokens=16,
+                   arrival=0 if i == 0 else 4)
+    eng.run()
+    return {
+        "prefix_hit_rate": round(eng.pool.prefix_hit_rate(), 3),
+        "prefix_hit_tokens": eng.pool.stats["prefix_hit_tokens"],
+        "prefix_cow_copies": eng.pool.stats["cow_copies"],
+    }
+
+
 def check_exact_match(cfg, params) -> bool:
     import jax.numpy as jnp
     import numpy as np
@@ -154,10 +275,17 @@ def check_exact_match(cfg, params) -> bool:
         naive.append(np.asarray(toks[0]))
     eng = Engine(cfg, params, num_slots=2, max_len=PIN["max_len"],
                  decode_chunk=4)
+    peng = _paged_engine(cfg, params, num_slots=2, prefill_chunk=8)
     for p in prompts:
         eng.submit(p, max_new_tokens=gen)
+        peng.submit(p, max_new_tokens=gen)
     res = eng.run()
-    return all(np.array_equal(res[i], naive[i]) for i in range(len(prompts)))
+    pres = peng.run()
+    dense_ok = all(np.array_equal(res[i], naive[i])
+                   for i in range(len(prompts)))
+    paged_ok = all(np.array_equal(pres[i], naive[i])
+                   for i in range(len(prompts)))
+    return dense_ok, paged_ok
 
 
 def main(out_path: str = OUT_PATH):
@@ -165,15 +293,20 @@ def main(out_path: str = OUT_PATH):
 
     from repro.models.model import build_model
 
-    cfg = _cfg()
+    cfg = cfg_g()
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     rec = {"pinned_config": PIN}
-    rec["greedy_exact_match"] = check_exact_match(cfg, params)
+    dense_ok, paged_ok = check_exact_match(cfg, params)
+    rec["greedy_exact_match"] = dense_ok
+    rec["paged_greedy_exact_match"] = paged_ok
     rec.update(measure_naive(cfg, params))
     rec.update(measure_engine(cfg, params))
     rec["decode_speedup_vs_naive"] = round(
         rec["engine_decode_tokens_per_s"] / rec["naive_decode_tokens_per_s"],
         2)
+    rec.update(measure_paged_vs_dense(cfg, params))
+    rec.update(measure_concurrency_at_fixed_bytes(cfg, params))
+    rec.update(measure_prefix_sharing(cfg, params))
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -184,6 +317,10 @@ def main(out_path: str = OUT_PATH):
           f"naive_tok_s={rec['naive_decode_tokens_per_s']};"
           f"speedup={rec['decode_speedup_vs_naive']};"
           f"exact_match={rec['greedy_exact_match']};"
+          f"paged_exact={rec['paged_greedy_exact_match']};"
+          f"paged_ratio={rec['paged_vs_dense_decode_ratio']};"
+          f"conc_gain={rec['concurrency_gain']};"
+          f"prefix_hit={rec['prefix_hit_rate']};"
           f"out={os.path.relpath(out_path)}")
     return rec
 

@@ -13,6 +13,7 @@ import os
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import parle_update as _pu
 from repro.kernels import ssd_scan as _ssd
 
@@ -27,6 +28,13 @@ def flash_attention(q, k, v, window: int = 0, block_q: int = 128,
                     block_k: int = 128):
     return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
                                block_k=block_k, interpret=_interpret())
+
+
+def paged_attention(q, k_pool, v_pool, table, lengths):
+    """Single-token paged decode attention: q (B, H, hd) against the
+    pages named by ``table`` (B, M), ``lengths`` (B,) live positions."""
+    return _pa.paged_attention(q, k_pool, v_pool, table, lengths,
+                               interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int = 128, h0=None):

@@ -124,6 +124,33 @@ def flash_attention(q, k, v, window: int = 0):
 
 
 # ------------------------------------------------------------------
+# paged_attention: single-token decode over a paged KV pool
+# ------------------------------------------------------------------
+
+def paged_attention(q, k_pool, v_pool, table, lengths):
+    """q: (B, H, hd) — one decode token per row, GQA unexpanded.
+    k_pool/v_pool: (P, ps, KV, hd); table: (B, M) page ids; lengths:
+    (B,) live positions.  Gathers each row's pages into the contiguous
+    extent and runs masked softmax attention — the most direct form.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    P, ps, KV, _ = k_pool.shape
+    M = table.shape[1]
+    S = M * ps
+    group = H // KV
+    k = k_pool[table].reshape(B, S, KV, hd)
+    v = v_pool[table].reshape(B, S, KV, hd)
+    k = jnp.repeat(k, group, axis=2)                   # (B, S, H, hd)
+    v = jnp.repeat(v, group, axis=2)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bhd,bshd->bhs", q, k).astype(jnp.float32) * scale
+    live = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(live, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhs,bshd->bhd", probs, v)
+
+
+# ------------------------------------------------------------------
 # ssd_scan: naive O(T) selective-scan recurrence
 # ------------------------------------------------------------------
 

@@ -20,6 +20,10 @@ Modes:
   (``--arrive-every``), greedy or ``--temperature``/``--top-k``.
 * ``--naive`` — the fixed one-request-at-a-time reference loop (first
   token from the prefill logits; measured post-warm-up).
+* ``--paged`` — the paged KV cache: ``--page-size`` token pages behind
+  per-slot page tables, ``--prefill-chunk``-token chunked prefill
+  interleaved with decode, hash-matched prefix sharing, and
+  page-exhaustion backpressure (``--num-pages`` bounds the pool).
 
 All throughput numbers are measured AFTER warm-up with
 ``block_until_ready``; compile time is reported as its own field.
@@ -118,7 +122,10 @@ def _engine_serve(cfg, params, requests, args):
                     + args.gen,
                     decode_chunk=args.decode_chunk,
                     sampling=SamplingParams(args.temperature, args.top_k),
-                    seed=args.seed)
+                    seed=args.seed, paged=args.paged,
+                    page_size=args.page_size,
+                    num_pages=args.num_pages if args.num_pages > 0 else None,
+                    prefill_chunk=args.prefill_chunk)
     for i, r in enumerate(requests):
         engine.submit(r["tokens"], max_new_tokens=args.gen,
                       eos_id=args.eos_id if args.eos_id >= 0 else None,
@@ -135,6 +142,10 @@ def _engine_serve(cfg, params, requests, args):
         "wall_s": round(wall, 3),
         "sample": np.asarray(results[0]).reshape(-1)[:8].tolist(),
     })
+    if args.paged:
+        rep.update({"paged": True, "page_size": args.page_size,
+                    "num_pages": engine.num_pages,
+                    "prefill_chunk": engine.prefill_chunk_len})
     print(json.dumps(rep), flush=True)
 
 
@@ -168,6 +179,17 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--naive", action="store_true",
                     help="the one-request-at-a-time reference loop")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page-pool layout, chunked "
+                         "prefill, prefix sharing, backpressure")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size incl. the trash page "
+                         "(0: slots * ceil(max_len/page_size) + 1)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per engine step "
+                         "(paged mode; interleaves with decode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

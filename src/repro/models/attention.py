@@ -219,3 +219,169 @@ def attn_decode(params, cfg, x, cache: KVCache):
     o = attention_core(q, kk, vv, live, causal=False)
     out = jnp.einsum("bte,ed->btd", o.reshape(B, 1, H * hd), params["wo"])
     return out, KVCache(ck, cv, pos + 1)
+
+
+# ------------------------------------------------------------------
+# Paged KV cache (serving): page-pool layout + page-table attention
+# ------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """KV storage as a shared page pool indexed through per-slot tables.
+
+    Position p of slot b lives at ``pool[table[b, p // ps], p % ps]``
+    (ps = page_size, static from the pool shape).  Page 0 is the trash
+    page (paging.TRASH_PAGE): table entries default to it, and writes
+    that must not land anywhere — inactive decode rows, positions past a
+    slot's allocated range — are redirected there.
+    """
+    k: jax.Array        # (L, num_pages, page_size, KV, hd)
+    v: jax.Array        # (L, num_pages, page_size, KV, hd)
+    table: jax.Array    # (num_slots, max_pages) int32 page ids
+    pos: jax.Array      # (num_slots,) int32 — tokens absorbed per slot
+
+
+def init_paged_kv_pool(cfg, num_slots: int, num_pages: int, page_size: int,
+                       max_pages: int, dtype=jnp.float32):
+    """Single-layer pool pair + table + pos (stacked over layers by the
+    family cache constructors)."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return (jnp.zeros((num_pages, page_size, KV, hd), dtype),
+            jnp.zeros((num_pages, page_size, KV, hd), dtype),
+            jnp.zeros((num_slots, max_pages), jnp.int32),
+            jnp.zeros((num_slots,), jnp.int32))
+
+
+def paged_gather(pool, table):
+    """Materialize the contiguous view: pool (P, ps, KV, hd) + table
+    (B, M) -> (B, M*ps, KV, hd).  Gathered values are bit-identical to
+    the dense cache rows, so downstream attention matches the dense
+    engine exactly when M*ps equals the dense max_len."""
+    B, M = table.shape
+    g = pool[table]                                  # (B, M, ps, KV, hd)
+    return g.reshape(B, M * pool.shape[1], *pool.shape[2:])
+
+
+def attn_prefill_paged(params, cfg, x, positions, pool_k, pool_v, table_row):
+    """Chunked prefill through the page table, single slot (B = 1).
+
+    x: (1, C, d); positions: (1, C) absolute cache positions (may run
+    past the valid prompt — padded tail); table_row: (max_pages,).
+    Writes the chunk's K/V into the slot's pages (out-of-range positions
+    go to the trash page) and attends causally against the slot's whole
+    paged extent.  Returns (out, pool_k, pool_v).
+    """
+    B, C, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ps = pool_k.shape[1]
+    M = table_row.shape[0]
+    S_pad = M * ps
+    q = jnp.einsum("btd,de->bte", x, params["wq"])
+    k = jnp.einsum("btd,de->bte", x, params["wk"])
+    v = jnp.einsum("btd,de->bte", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q.reshape(B, C, H, hd), positions, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, C, KV, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, C, KV, hd)
+
+    p = positions[0]                                    # (C,)
+    in_range = p < S_pad
+    pidx = jnp.minimum(p // ps, M - 1)
+    pages = jnp.where(in_range, table_row[pidx], 0)     # trash when OOR
+    off = p % ps
+    pool_k = pool_k.at[pages, off].set(k[0])
+    pool_v = pool_v.at[pages, off].set(v[0])
+
+    kk = _repeat_kv(paged_gather(pool_k, table_row[None]), H // KV)
+    vv = _repeat_kv(paged_gather(pool_v, table_row[None]), H // KV)
+    mask = (jnp.arange(S_pad)[None, :] <= p[:, None])[None, None]
+    o = attention_core(q, kk, vv, mask, causal=False)
+    out = jnp.einsum("bte,ed->btd", o.reshape(B, C, H * hd), params["wo"])
+    return out, pool_k, pool_v
+
+
+def paged_to_dense_kv(pc: PagedKVCache) -> KVCache:
+    """Materialize the dense slot-cache view of a paged cache: pool
+    (L, P, ps, KV, hd) gathered through the table into (L, B, M*ps, KV,
+    hd).  Gathered rows are bitwise the pool rows, so running the plain
+    dense ``attn_decode`` on the view is bit-identical to paged decode.
+
+    The engine uses this to hoist the gather OUT of the fused decode
+    chunk: one gather + one scatter (``dense_to_paged_kv``) per chunk
+    instead of per token — the page table cannot change mid-chunk.
+    """
+    L = pc.k.shape[0]
+    B, M = pc.table.shape
+    ps = pc.k.shape[2]
+    tail = pc.k.shape[3:]
+    gk = pc.k[:, pc.table].reshape(L, B, M * ps, *tail)
+    gv = pc.v[:, pc.table].reshape(L, B, M * ps, *tail)
+    return KVCache(k=gk, v=gv, pos=pc.pos)
+
+
+def dense_to_paged_kv(pc: PagedKVCache, dc: KVCache, active,
+                      steps: int) -> PagedKVCache:
+    """Scatter a chunk's dense view back into the pool.  Inactive rows
+    (idle / mid-prefill) scatter to the trash page — their view rows
+    absorbed garbage decode writes that must not touch their real pages.
+    Shared prefix pages appear in several active rows' tables, but
+    decode only writes past the prompt (private pages), so the duplicate
+    scatter payloads are bitwise equal and the result is deterministic.
+    """
+    L = pc.k.shape[0]
+    B, M = pc.table.shape
+    ps = pc.k.shape[2]
+    tail = pc.k.shape[3:]
+    tbl = jnp.where(active[:, None], pc.table, 0)
+    k = pc.k.at[:, tbl].set(dc.k.reshape(L, B, M, ps, *tail))
+    v = pc.v.at[:, tbl].set(dc.v.reshape(L, B, M, ps, *tail))
+    pos = pc.pos + steps * active.astype(jnp.int32)
+    return PagedKVCache(k=k, v=v, table=pc.table, pos=pos)
+
+
+def attn_decode_paged(params, cfg, x, pool_k, pool_v, table, pos, active,
+                      use_kernel: bool = False):
+    """One-token decode over the whole slot batch through page tables.
+
+    x: (B, 1, d); pos: (B,) int32; active: (B,) bool — inactive rows
+    (idle / still prefilling) write to the trash page and their output
+    is garbage the engine never keeps.  Mirrors ``attn_decode`` exactly
+    for active rows: when max_pages*page_size == the dense max_len the
+    gathered extent and mask coincide and the result is bit-identical.
+    """
+    B, _, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ps = pool_k.shape[1]
+    M = table.shape[1]
+    S_pad = M * ps
+    posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+    q = jnp.einsum("btd,de->bte", x, params["wq"])
+    k = jnp.einsum("btd,de->bte", x, params["wk"])
+    v = jnp.einsum("btd,de->bte", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    posb = posv[:, None]
+    q = apply_rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, 1, KV, hd), posb, cfg.rope_theta)
+    v = v.reshape(B, 1, KV, hd)
+
+    ok = active & (posv < S_pad)
+    pidx = jnp.minimum(posv // ps, M - 1)
+    pages = jnp.where(ok, table[jnp.arange(B), pidx], 0)
+    off = posv % ps
+    pool_k = pool_k.at[pages, off].set(k[:, 0])
+    pool_v = pool_v.at[pages, off].set(v[:, 0])
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        lengths = jnp.minimum(posv + 1, S_pad)
+        o = kops.paged_attention(q[:, 0], pool_k, pool_v, table,
+                                 lengths)[:, None]
+    else:
+        kk = _repeat_kv(paged_gather(pool_k, table), H // KV)
+        vv = _repeat_kv(paged_gather(pool_v, table), H // KV)
+        live = (jnp.arange(S_pad)[None, None, None, :]
+                < jnp.minimum(posv + 1, S_pad)[:, None, None, None])
+        o = attention_core(q, kk, vv, live, causal=False)
+    out = jnp.einsum("bte,ed->btd", o.reshape(B, 1, H * hd), params["wo"])
+    return out, pool_k, pool_v

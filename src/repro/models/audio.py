@@ -99,3 +99,55 @@ def decode_step(params, cfg, token, cache, cond=None):
         {**params, "embed": params["embed"][0], "head": params["head"]},
         cfg, zero_tokens, cache, extra_embeds=extra)
     return logits_flat.reshape(B, 1, K, cfg.vocab_size), cache
+
+
+# ------------------------------------------------------------------
+# Paged-engine entry points.  Positions are MERGED coordinates: the
+# cond frames occupy [0, cond_len) of the cache, tokens follow — the
+# engine's frontier/total/pos all count merged positions.
+# ------------------------------------------------------------------
+
+def init_paged_cache(params, cfg, num_slots, num_pages, page_size, max_pages,
+                     dtype=jnp.float32):
+    return transformer.init_paged_cache(params, cfg, num_slots, num_pages,
+                                        page_size, max_pages, dtype)
+
+
+def prefill_chunk(params, cfg, tokens, cache, slot, frontier, valid,
+                  cond=None):
+    """One prefill chunk.  tokens: (1, K, C) aligned to MERGED positions
+    frontier..frontier+C-1 (the engine zero-fills entries whose position
+    falls in the cond region or the padded tail).  Rows in the cond
+    region take the conditioning frame instead of the token embedding —
+    row-for-row what ``_with_cond`` builds for the whole prompt.
+    Returns logits (1, C, K, V): only token-region rows are meaningful.
+    """
+    B, K, C = tokens.shape
+    emb = _embed(params, cfg, tokens)               # (1, C, d)
+    p = frontier + jnp.arange(C, dtype=jnp.int32)
+    if cond is not None:
+        cl = cond.shape[1]
+        crow = cond[0][jnp.clip(p, 0, cl - 1)].astype(emb.dtype)[None]
+        x = jnp.where((p < cl)[None, :, None], crow, emb)
+    else:
+        x = emb
+    zero_tokens = jnp.zeros((B, C), jnp.int32)
+    extra = x - params["embed"][0][zero_tokens]
+    logits_flat, cache = transformer.prefill_chunk(
+        {**params, "embed": params["embed"][0], "head": params["head"]},
+        cfg, zero_tokens, cache, slot, frontier, valid, extra_embeds=extra)
+    return logits_flat.reshape(B, C, K, cfg.vocab_size), cache
+
+
+def decode_step_paged(params, cfg, token, cache, active, cond=None,
+                      use_kernel=False):
+    del cond
+    B, K, _ = token.shape
+    x = _embed(params, cfg, token)
+    zero_tokens = jnp.zeros((B, 1), jnp.int32)
+    extra = x - params["embed"][0][zero_tokens]
+    logits_flat, cache = transformer.decode_step_paged(
+        {**params, "embed": params["embed"][0], "head": params["head"]},
+        cfg, zero_tokens, cache, active, extra_embeds=extra,
+        use_kernel=use_kernel)
+    return logits_flat.reshape(B, 1, K, cfg.vocab_size), cache

@@ -113,7 +113,13 @@ def init_cache(cfg, batch, max_len, dtype=jnp.float32) -> HybridCache:
     )
 
 
-def prefill(params, cfg, tokens, cache: HybridCache, use_flash=False):
+def prefill(params, cfg, tokens, cache: HybridCache, use_flash=False,
+            valid=None):
+    """``valid``: optional () int32 for bucketed (zero-padded) prompts —
+    positions >= valid are made inert in the SSM scan and the conv ring
+    ends at ``valid`` (their KV-cache rows hold garbage that decode
+    overwrites before its live mask exposes them).  None keeps the
+    historical unpadded path bit-for-bit."""
     B, T = tokens.shape
     x = params["embed"][tokens]
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
@@ -124,16 +130,30 @@ def prefill(params, cfg, tokens, cache: HybridCache, use_flash=False):
     for g, size in enumerate(_group_sizes(cfg)):
         grp = _slice_layers(params["layers"], start, size)
 
-        def body(h, inp):
-            lp, h0 = inp
-            out, hf = mamba2.ssm_block_forward(lp, cfg, h, h0=h0)
-            u = rms_norm(h, lp["ln"], cfg.norm_eps)
-            proj = jnp.einsum("btd,de->bte", u[:, -(cfg.ssm_conv - 1):], lp["in_proj"])
-            _, xBC, _ = mamba2._split_proj(cfg, proj)
-            return out, (hf, xBC)
+        if valid is not None:
+            def body(h, inp):
+                lp, h0, c0 = inp
+                out, hf, ring = mamba2.ssm_block_prefill(lp, cfg, h, h0, c0,
+                                                         valid)
+                return out, (hf, ring)
 
-        h0s = jax.lax.slice_in_dim(cache.ssm.state, start, start + size, axis=0)
-        x, (st, cv) = jax.lax.scan(body, x, (grp, h0s), unroll=layer_unroll())
+            h0s = jax.lax.slice_in_dim(cache.ssm.state, start, start + size,
+                                       axis=0)
+            c0s = jax.lax.slice_in_dim(cache.ssm.conv, start, start + size,
+                                       axis=0)
+            x, (st, cv) = jax.lax.scan(body, x, (grp, h0s, c0s),
+                                       unroll=layer_unroll())
+        else:
+            def body(h, inp):
+                lp, h0 = inp
+                out, hf = mamba2.ssm_block_forward(lp, cfg, h, h0=h0)
+                u = rms_norm(h, lp["ln"], cfg.norm_eps)
+                proj = jnp.einsum("btd,de->bte", u[:, -(cfg.ssm_conv - 1):], lp["in_proj"])
+                _, xBC, _ = mamba2._split_proj(cfg, proj)
+                return out, (hf, xBC)
+
+            h0s = jax.lax.slice_in_dim(cache.ssm.state, start, start + size, axis=0)
+            x, (st, cv) = jax.lax.scan(body, x, (grp, h0s), unroll=layer_unroll())
         states.append(st)
         convs.append(cv)
 
@@ -199,3 +219,145 @@ def decode_step(params, cfg, token, cache: HybridCache):
         pos=cache.pos + 1,
     )
     return logits, new_cache
+
+
+# ------------------------------------------------------------------
+# Paged-engine entry points: the shared-attn KV goes through page
+# tables (pool leading axis = attention sites), the SSM state stays
+# dense per slot (O(1) per request — nothing to page).
+# ------------------------------------------------------------------
+
+def init_paged_cache(params, cfg, num_slots, num_pages, page_size, max_pages,
+                     dtype=jnp.float32):
+    del params
+    sites = num_attn_sites(cfg)
+    k1, v1, table, pos = attn.init_paged_kv_pool(cfg, num_slots, num_pages,
+                                                 page_size, max_pages, dtype)
+    ssm = mamba2.init_cache(cfg, num_slots, dtype)
+    return HybridCache(
+        ssm=ssm._replace(pos=jnp.zeros((num_slots,), jnp.int32)),
+        kv=attn.PagedKVCache(
+            k=jnp.zeros((sites,) + k1.shape, dtype),
+            v=jnp.zeros((sites,) + v1.shape, dtype),
+            table=table, pos=pos),
+        pos=jnp.zeros((num_slots,), jnp.int32),
+    )
+
+
+def prefill_chunk(params, cfg, tokens, cache: HybridCache, slot, frontier,
+                  valid):
+    """One resumable prefill chunk for a single slot.  tokens: (1, C)."""
+    B, C = tokens.shape
+    x = params["embed"][tokens]
+    positions = (frontier + jnp.arange(C, dtype=jnp.int32))[None]
+    table_row = cache.kv.table[slot]
+    sp = params["shared_attn"]
+
+    states, convs, pks, pvs = [], [], [], []
+    start = 0
+    for g, size in enumerate(_group_sizes(cfg)):
+        grp = _slice_layers(params["layers"], start, size)
+
+        def body(h, inp):
+            lp, h0, c0 = inp
+            out, hf, ring = mamba2.ssm_block_prefill(lp, cfg, h, h0, c0,
+                                                     valid)
+            return out, (hf, ring)
+
+        h0s = jax.lax.slice_in_dim(cache.ssm.state, start, start + size,
+                                   axis=0)[:, slot][:, None]
+        c0s = jax.lax.slice_in_dim(cache.ssm.conv, start, start + size,
+                                   axis=0)[:, slot][:, None]
+        x, (st, cv) = jax.lax.scan(body, x, (grp, h0s, c0s),
+                                   unroll=layer_unroll())
+        states.append(st[:, 0])
+        convs.append(cv[:, 0])
+
+        a, pk, pv = attn.attn_prefill_paged(
+            sp["attn"], cfg, rms_norm(x, sp["ln1"], cfg.norm_eps),
+            positions, cache.kv.k[g], cache.kv.v[g], table_row)
+        x = x + a
+        x = x + swiglu(rms_norm(x, sp["ln2"], cfg.norm_eps), **sp["mlp"])
+        pks.append(pk)
+        pvs.append(pv)
+        start += size
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["head"])
+    st_all = jnp.concatenate(states, axis=0)
+    cv_all = jnp.concatenate(convs, axis=0)
+    new_cache = HybridCache(
+        ssm=mamba2.SSMCache(conv=cache.ssm.conv.at[:, slot].set(cv_all),
+                            state=cache.ssm.state.at[:, slot].set(st_all),
+                            pos=cache.ssm.pos),
+        kv=cache.kv._replace(k=jnp.stack(pks), v=jnp.stack(pvs)),
+        pos=cache.pos,
+    )
+    return logits, new_cache
+
+
+def decode_step_paged(params, cfg, token, cache: HybridCache, active,
+                      use_kernel=False):
+    """decode_step over the slot batch: shared-attn KV through the page
+    tables (inactive rows -> trash page), SSM state frozen on inactive
+    rows."""
+    x = params["embed"][token]
+    sp = params["shared_attn"]
+
+    states, convs, pks, pvs = [], [], [], []
+    start = 0
+    for g, size in enumerate(_group_sizes(cfg)):
+        grp = _slice_layers(params["layers"], start, size)
+
+        def body(h, inp):
+            lp, cc, st = inp
+            out, ncc, nst = mamba2.ssm_block_decode(lp, cfg, h, cc, st)
+            return out, (ncc, nst)
+
+        cc = jax.lax.slice_in_dim(cache.ssm.conv, start, start + size, axis=0)
+        st = jax.lax.slice_in_dim(cache.ssm.state, start, start + size, axis=0)
+        x, (ncc, nst) = jax.lax.scan(body, x, (grp, cc, st),
+                                     unroll=layer_unroll())
+        convs.append(jnp.where(active[None, :, None, None], ncc, cc))
+        states.append(jnp.where(active[None, :, None, None, None], nst, st))
+
+        a, pk, pv = attn.attn_decode_paged(
+            sp["attn"], cfg, rms_norm(x, sp["ln1"], cfg.norm_eps),
+            cache.kv.k[g], cache.kv.v[g], cache.kv.table, cache.kv.pos,
+            active, use_kernel=use_kernel)
+        x = x + a
+        x = x + swiglu(rms_norm(x, sp["ln2"], cfg.norm_eps), **sp["mlp"])
+        pks.append(pk)
+        pvs.append(pv)
+        start += size
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["head"])
+    step = active.astype(jnp.int32)
+    new_cache = HybridCache(
+        ssm=mamba2.SSMCache(conv=jnp.concatenate(convs, axis=0),
+                            state=jnp.concatenate(states, axis=0),
+                            pos=cache.ssm.pos + step),
+        kv=cache.kv._replace(k=jnp.stack(pks), v=jnp.stack(pvs),
+                             pos=cache.kv.pos + step),
+        pos=cache.pos + step,
+    )
+    return logits, new_cache
+
+
+def paged_to_dense(cache: HybridCache) -> HybridCache:
+    """Chunk view for decode: gather the shared-attn page pool into a
+    dense per-slot KV cache (the SSM half is already dense)."""
+    return HybridCache(ssm=cache.ssm,
+                       kv=attn.paged_to_dense_kv(cache.kv),
+                       pos=cache.pos)
+
+
+def paged_restore(cache: HybridCache, dense: HybridCache, active,
+                  steps) -> HybridCache:
+    step = steps * active.astype(jnp.int32)
+    return HybridCache(
+        ssm=mamba2.paged_restore(cache.ssm, dense.ssm, active, steps),
+        kv=attn.dense_to_paged_kv(cache.kv, dense.kv, active, steps),
+        pos=cache.pos + step,
+    )

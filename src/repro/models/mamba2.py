@@ -160,10 +160,18 @@ def _split_proj(cfg, proj):
     return z, xBC, dt
 
 
-def _causal_conv(xBC, w, b):
-    """Depthwise causal conv.  xBC: (B, T, C); w: (W, C)."""
+def _causal_conv(xBC, w, b, prefix=None):
+    """Depthwise causal conv.  xBC: (B, T, C); w: (W, C).
+
+    ``prefix``: optional (B, W-1, C) ring of raw xBC inputs preceding
+    this segment (chunk-resumed prefill); None pads with zeros — and a
+    zero prefix is bitwise identical to the zero padding.
+    """
     W = w.shape[0]
-    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    if prefix is None:
+        pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([prefix.astype(xBC.dtype), xBC], axis=1)
     out = jnp.zeros_like(xBC)
     for i in range(W):
         out = out + pad[:, i:i + xBC.shape[1], :] * w[i]
@@ -192,6 +200,46 @@ def ssm_block_forward(lp, cfg, x, h0=None, use_kernel=False):
     y = y.reshape(Bsz, T, di)
     y = rms_norm(y * silu(z), lp["norm"], cfg.norm_eps)
     return x + jnp.einsum("bte,ed->btd", y, lp["out_proj"]), hf
+
+
+def ssm_block_prefill(lp, cfg, x, h0, conv0, valid):
+    """Chunk-resumable SSM block: state AND conv ring threaded across
+    segment boundaries, padded tail made exactly inert.
+
+    x: (B, C, d); h0: (B, nh, N, P); conv0: (B, W-1, conv_dim) raw-xBC
+    ring entering this segment; valid: () int32 — positions >= valid
+    are padding.  Forcing their dt to exactly 0 AFTER softplus makes
+    them inert in the SSD recurrence (decay exp(0·A)=1, update
+    dt·B⊗x=0), matching ``ssd_chunked``'s own dt=0 chunk padding, so a
+    segmented prefill reproduces the one-shot scan state.  Segment
+    length must be a multiple of cfg.ssm_chunk for the chunk
+    decomposition to coincide bitwise (the engine rounds prefill_chunk
+    up).  Returns (out, h_final, new_ring).
+    """
+    Bsz, T, d = x.shape
+    di, N, nh, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    u = rms_norm(x, lp["ln"], cfg.norm_eps)
+    proj = jnp.einsum("btd,de->bte", u, lp["in_proj"])
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_raw, lp["conv_w"], lp["conv_b"], prefix=conv0)
+    xs = xBC[..., :di].reshape(Bsz, T, nh, P)
+    B_mat = xBC[..., di:di + N]
+    C_mat = xBC[..., di + N:]
+    dt = softplus(dt + lp["dt_bias"])
+    dt = jnp.where((jnp.arange(T) < valid)[None, :, None], dt, 0.0)
+    A = -jnp.exp(lp["A_log"])
+    y, hf = ssd_chunked(xs, dt, A, B_mat, C_mat, cfg.ssm_chunk, h0=h0)
+    y = y + lp["D"][None, None, :, None] * xs
+    y = y.reshape(Bsz, T, di)
+    y = rms_norm(y * silu(z), lp["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bte,ed->btd", y, lp["out_proj"])
+    # ring leaving the segment: raw xBC of the W-1 positions before
+    # ``valid`` (reaching into conv0 when the segment is shorter)
+    hist = jnp.concatenate([conv0.astype(xBC_raw.dtype), xBC_raw], axis=1)
+    W = cfg.ssm_conv
+    ring = jax.lax.dynamic_slice(
+        hist, (0, valid, 0), (Bsz, W - 1, hist.shape[-1]))
+    return out, hf, ring
 
 
 def ssm_block_decode(lp, cfg, x, conv_cache, h):
@@ -266,22 +314,41 @@ def init_cache(cfg, batch, dtype=jnp.float32, num_layers=None) -> SSMCache:
     )
 
 
-def prefill(params, cfg, tokens, cache: SSMCache, use_kernel=False):
-    """Absorb a prompt; returns logits + populated state cache."""
+def prefill(params, cfg, tokens, cache: SSMCache, use_kernel=False,
+            valid=None):
+    """Absorb a prompt; returns logits + populated state cache.
+
+    ``valid``: optional () int32 — positions >= valid are padding (the
+    engine's bucketed prompts); they are made inert in the scan and the
+    conv ring ends at ``valid``.  None keeps the historical unpadded
+    path bit-for-bit.
+    """
     x = params["embed"][tokens]
     T = tokens.shape[1]
 
-    def body(h, inp):
-        lp, h0 = inp
-        out, hf = ssm_block_forward(lp, cfg, h, h0=h0, use_kernel=use_kernel)
-        # conv cache = last W-1 raw xBC inputs of this layer
-        u = rms_norm(h, lp["ln"], cfg.norm_eps)
-        proj = jnp.einsum("btd,de->bte", u[:, -(cfg.ssm_conv - 1):], lp["in_proj"])
-        _, xBC, _ = _split_proj(cfg, proj)
-        return out, (hf, xBC)
+    if valid is not None:
+        def body(h, inp):
+            lp, h0, c0 = inp
+            out, hf, ring = ssm_block_prefill(lp, cfg, h, h0, c0, valid)
+            return out, (hf, ring)
 
-    x, (states, convs) = jax.lax.scan(body, x, (params["layers"], cache.state),
-                                      unroll=layer_unroll())
+        x, (states, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache.state, cache.conv),
+            unroll=layer_unroll())
+    else:
+        def body(h, inp):
+            lp, h0 = inp
+            out, hf = ssm_block_forward(lp, cfg, h, h0=h0,
+                                        use_kernel=use_kernel)
+            # conv cache = last W-1 raw xBC inputs of this layer
+            u = rms_norm(h, lp["ln"], cfg.norm_eps)
+            proj = jnp.einsum("btd,de->bte", u[:, -(cfg.ssm_conv - 1):],
+                              lp["in_proj"])
+            _, xBC, _ = _split_proj(cfg, proj)
+            return out, (hf, xBC)
+
+        x, (states, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache.state), unroll=layer_unroll())
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = jnp.einsum("btd,dv->btv", x, params["head"])
     return logits, SSMCache(conv=convs, state=states, pos=cache.pos + T)
@@ -301,3 +368,67 @@ def decode_step(params, cfg, token, cache: SSMCache):
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = jnp.einsum("btd,dv->btv", x, params["head"])
     return logits, SSMCache(conv=convs, state=states, pos=cache.pos + 1)
+
+
+# ------------------------------------------------------------------
+# Paged-engine entry points.  SSM state is O(1) per slot (no KV pages
+# to manage) — "paged" here buys the chunked-prefill interleaving and
+# the shared engine plumbing: pos is a per-slot vector, decode rows can
+# be inactive, prefill runs one resumable chunk at a time.
+# ------------------------------------------------------------------
+
+def init_paged_cache(params, cfg, num_slots, num_pages, page_size, max_pages,
+                     dtype=jnp.float32):
+    del params, num_pages, page_size, max_pages
+    base = init_cache(cfg, num_slots, dtype)
+    return base._replace(pos=jnp.zeros((num_slots,), jnp.int32))
+
+
+def prefill_chunk(params, cfg, tokens, cache: SSMCache, slot, frontier,
+                  valid):
+    """One resumable prefill chunk for a single slot.  tokens: (1, C)."""
+    del frontier                      # state carry IS the position
+    x = params["embed"][tokens]
+
+    def body(h, inp):
+        lp, h0, c0 = inp
+        out, hf, ring = ssm_block_prefill(lp, cfg, h, h0, c0, valid)
+        return out, (hf, ring)
+
+    h0s = cache.state[:, slot][:, None]          # (L, 1, nh, N, P)
+    c0s = cache.conv[:, slot][:, None]           # (L, 1, W-1, conv_dim)
+    x, (states, convs) = jax.lax.scan(body, x, (params["layers"], h0s, c0s),
+                                      unroll=layer_unroll())
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["head"])
+    return logits, SSMCache(conv=cache.conv.at[:, slot].set(convs[:, 0]),
+                            state=cache.state.at[:, slot].set(states[:, 0]),
+                            pos=cache.pos)
+
+
+def decode_step_paged(params, cfg, token, cache: SSMCache, active):
+    """decode_step over the slot batch with inactive rows frozen: their
+    conv ring / state / pos keep their old values (the computed row is
+    garbage the engine never reads)."""
+    logits, nc = decode_step(params, cfg, token, cache)
+    conv = jnp.where(active[None, :, None, None], nc.conv, cache.conv)
+    state = jnp.where(active[None, :, None, None, None], nc.state,
+                      cache.state)
+    return logits, SSMCache(conv=conv, state=state,
+                            pos=cache.pos + active.astype(jnp.int32))
+
+
+def paged_to_dense(cache: SSMCache) -> SSMCache:
+    """SSM state is already dense per slot — the chunk view is the cache
+    itself; ``paged_restore`` does the per-row freezing once per chunk
+    instead of every step."""
+    return cache
+
+
+def paged_restore(cache: SSMCache, dense: SSMCache, active,
+                  steps) -> SSMCache:
+    conv = jnp.where(active[None, :, None, None], dense.conv, cache.conv)
+    state = jnp.where(active[None, :, None, None, None], dense.state,
+                      cache.state)
+    return SSMCache(conv=conv, state=state,
+                    pos=cache.pos + steps * active.astype(jnp.int32))

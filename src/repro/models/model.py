@@ -49,8 +49,26 @@ class Model:
     apply: Callable              # (params, batch) -> (logits, aux)
     loss: Callable               # (params, batch) -> (scalar, aux)
     init_cache: Callable         # (params, batch_size, max_len) -> cache
-    prefill: Callable            # (params, batch, cache) -> (logits, cache)
+    prefill: Callable            # (params, batch, cache[, valid]) ->
+                                 # (logits, cache); ``valid`` () int32 marks
+                                 # tokens >= valid as bucket padding
     decode: Callable             # (params, batch, cache) -> (logits, cache)
+    # paged serving (PR 7) — page-pool cache, chunked prefill, masked decode
+    init_paged_cache: Callable = None
+    # (params, num_slots, num_pages, page_size, max_pages) -> cache
+    prefill_chunk: Callable = None
+    # (params, batch, cache, slot, frontier, valid, total) -> (logits, cache):
+    # one (1, C)-token chunk of one slot's prompt; ``frontier`` its absolute
+    # start, ``valid`` the live rows, ``total`` the full prompt extent
+    decode_paged: Callable = None
+    # (params, batch, cache, active) -> (logits, cache): one decode step over
+    # the slot batch; ``active`` (B,) bool freezes inactive rows
+    paged_to_dense: Callable = None
+    # (paged_cache) -> dense cache view: page tables are constant within a
+    # decode chunk, so the engine gathers once and scans plain ``decode``
+    paged_restore: Callable = None
+    # (paged_cache, dense_cache, active, steps) -> paged_cache: scatter the
+    # chunk's view back (inactive rows -> trash page, pos frozen)
 
 
 def is_pos_entry(entry) -> bool:
@@ -112,7 +130,8 @@ def _audio_loss(hidden_fn, cfg):
     return loss
 
 
-def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
+def build_model(cfg, use_flash: bool = False, remat: bool = False,
+                use_paged_kernel: bool = False) -> Model:
     fam = cfg.family
 
     if fam in ("dense", "moe"):
@@ -126,8 +145,17 @@ def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
             apply=apply_fn,
             loss=_lm_loss(hidden_fn, cfg),
             init_cache=lambda p, bs, ml, dtype=jnp.float32: tfm.init_cache(p, cfg, bs, ml, dtype),
-            prefill=lambda p, b, c: tfm.prefill(p, cfg, b["tokens"], c, use_flash=use_flash),
+            prefill=lambda p, b, c, valid=None: tfm.prefill(p, cfg, b["tokens"], c, use_flash=use_flash),
             decode=lambda p, b, c: tfm.decode_step(p, cfg, b["tokens"], c),
+            init_paged_cache=lambda p, bs, np_, ps, mp, dtype=jnp.float32:
+                tfm.init_paged_cache(p, cfg, bs, np_, ps, mp, dtype),
+            prefill_chunk=lambda p, b, c, slot, frontier, valid, total:
+                tfm.prefill_chunk(p, cfg, b["tokens"], c, slot, frontier, valid),
+            decode_paged=lambda p, b, c, active:
+                tfm.decode_step_paged(p, cfg, b["tokens"], c, active,
+                                      use_kernel=use_paged_kernel),
+            paged_to_dense=tfm.paged_to_dense,
+            paged_restore=tfm.paged_restore,
         )
 
     if fam == "ssm":
@@ -139,8 +167,16 @@ def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
             apply=apply_fn,
             loss=_lm_loss(hidden_fn, cfg),
             init_cache=lambda p, bs, ml, dtype=jnp.float32: ssm_mod.init_cache(cfg, bs, dtype),
-            prefill=lambda p, b, c: ssm_mod.prefill(p, cfg, b["tokens"], c),
+            prefill=lambda p, b, c, valid=None: ssm_mod.prefill(p, cfg, b["tokens"], c, valid=valid),
             decode=lambda p, b, c: ssm_mod.decode_step(p, cfg, b["tokens"], c),
+            init_paged_cache=lambda p, bs, np_, ps, mp, dtype=jnp.float32:
+                ssm_mod.init_paged_cache(p, cfg, bs, np_, ps, mp, dtype),
+            prefill_chunk=lambda p, b, c, slot, frontier, valid, total:
+                ssm_mod.prefill_chunk(p, cfg, b["tokens"], c, slot, frontier, valid),
+            decode_paged=lambda p, b, c, active:
+                ssm_mod.decode_step_paged(p, cfg, b["tokens"], c, active),
+            paged_to_dense=ssm_mod.paged_to_dense,
+            paged_restore=ssm_mod.paged_restore,
         )
 
     if fam == "hybrid":
@@ -154,8 +190,18 @@ def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
             apply=apply_fn,
             loss=_lm_loss(hidden_fn, cfg),
             init_cache=lambda p, bs, ml, dtype=jnp.float32: hybrid_mod.init_cache(cfg, bs, ml, dtype),
-            prefill=lambda p, b, c: hybrid_mod.prefill(p, cfg, b["tokens"], c, use_flash=use_flash),
+            prefill=lambda p, b, c, valid=None: hybrid_mod.prefill(p, cfg, b["tokens"], c,
+                                                                   use_flash=use_flash, valid=valid),
             decode=lambda p, b, c: hybrid_mod.decode_step(p, cfg, b["tokens"], c),
+            init_paged_cache=lambda p, bs, np_, ps, mp, dtype=jnp.float32:
+                hybrid_mod.init_paged_cache(p, cfg, bs, np_, ps, mp, dtype),
+            prefill_chunk=lambda p, b, c, slot, frontier, valid, total:
+                hybrid_mod.prefill_chunk(p, cfg, b["tokens"], c, slot, frontier, valid),
+            decode_paged=lambda p, b, c, active:
+                hybrid_mod.decode_step_paged(p, cfg, b["tokens"], c, active,
+                                             use_kernel=use_paged_kernel),
+            paged_to_dense=hybrid_mod.paged_to_dense,
+            paged_restore=hybrid_mod.paged_restore,
         )
 
     if fam == "vlm":
@@ -170,8 +216,18 @@ def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
             apply=apply_fn,
             loss=_lm_loss(hidden_fn, cfg),
             init_cache=lambda p, bs, ml, dtype=jnp.float32: vlm_mod.init_cache(p, cfg, bs, ml, dtype),
-            prefill=lambda p, b, c: vlm_mod.prefill(p, cfg, b["tokens"], b["patch_embeds"], c),
+            prefill=lambda p, b, c, valid=None: vlm_mod.prefill(p, cfg, b["tokens"], b["patch_embeds"], c),
             decode=lambda p, b, c: vlm_mod.decode_step(p, cfg, b["tokens"], c),
+            init_paged_cache=lambda p, bs, np_, ps, mp, dtype=jnp.float32:
+                vlm_mod.init_paged_cache(p, cfg, bs, np_, ps, mp, dtype),
+            prefill_chunk=lambda p, b, c, slot, frontier, valid, total:
+                vlm_mod.prefill_chunk(p, cfg, b["tokens"], b["patch_embeds"], c,
+                                      slot, frontier, valid, total),
+            decode_paged=lambda p, b, c, active:
+                vlm_mod.decode_step_paged(p, cfg, b["tokens"], c, active,
+                                          use_kernel=use_paged_kernel),
+            paged_to_dense=tfm.paged_to_dense,
+            paged_restore=tfm.paged_restore,
         )
 
     if fam == "audio":
@@ -186,8 +242,18 @@ def build_model(cfg, use_flash: bool = False, remat: bool = False) -> Model:
             apply=apply_fn,
             loss=_audio_loss(hidden_fn, cfg),
             init_cache=lambda p, bs, ml, dtype=jnp.float32: audio_mod.init_cache(p, cfg, bs, ml, dtype),
-            prefill=lambda p, b, c: audio_mod.prefill(p, cfg, b["tokens"], c, cond=b.get("cond")),
+            prefill=lambda p, b, c, valid=None: audio_mod.prefill(p, cfg, b["tokens"], c, cond=b.get("cond")),
             decode=lambda p, b, c: audio_mod.decode_step(p, cfg, b["tokens"], c, cond=None),
+            init_paged_cache=lambda p, bs, np_, ps, mp, dtype=jnp.float32:
+                audio_mod.init_paged_cache(p, cfg, bs, np_, ps, mp, dtype),
+            prefill_chunk=lambda p, b, c, slot, frontier, valid, total:
+                audio_mod.prefill_chunk(p, cfg, b["tokens"], c, slot, frontier,
+                                        valid, cond=b.get("cond")),
+            decode_paged=lambda p, b, c, active:
+                audio_mod.decode_step_paged(p, cfg, b["tokens"], c, active,
+                                            use_kernel=use_paged_kernel),
+            paged_to_dense=tfm.paged_to_dense,
+            paged_restore=tfm.paged_restore,
         )
 
     raise ValueError(f"unknown family: {fam}")

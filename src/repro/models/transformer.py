@@ -209,3 +209,102 @@ def decode_step(params, cfg, token, cache, extra_embeds=None):
                                unroll=layer_unroll())
     new_cache = attn.KVCache(ks, vs, cache.pos + 1)
     return logits_from_hidden(params, cfg, h), new_cache
+
+
+# ------------------------------------------------------------------
+# Serving: paged cache (page pools + per-slot tables) + chunked prefill
+# ------------------------------------------------------------------
+
+def init_paged_cache(params, cfg, num_slots, num_pages, page_size, max_pages,
+                     dtype=jnp.float32):
+    k1, v1, table, pos = attn.init_paged_kv_pool(cfg, num_slots, num_pages,
+                                                 page_size, max_pages, dtype)
+    L = cfg.num_layers
+    return attn.PagedKVCache(
+        k=jnp.zeros((L,) + k1.shape, dtype),
+        v=jnp.zeros((L,) + v1.shape, dtype),
+        table=table, pos=pos,
+    )
+
+
+def prefill_chunk(params, cfg, tokens, cache, slot, frontier, valid,
+                  extra_embeds=None):
+    """One chunk of a single slot's prefill through the page table.
+
+    tokens: (1, C) — the chunk's slice of the prompt, zero-padded past
+    ``valid``; ``frontier`` is the chunk's absolute start position.  The
+    padded tail's writes land past the slot's allocated pages (-> trash)
+    or in not-yet-live positions later overwritten by decode, so only
+    ``valid`` logit rows are meaningful.  Returns (logits (1, C, V),
+    cache); cache.pos is NOT advanced (the engine sets it once the whole
+    prompt is in).
+    """
+    del valid  # attention needs no masking: padded rows are causal-future
+    B, C = tokens.shape
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        x = x + extra_embeds
+    positions = (frontier + jnp.arange(C, dtype=jnp.int32))[None]
+    table_row = cache.table[slot]
+
+    def body(carry, layer):
+        h = carry
+        bp, pk, pv = layer
+        a, pk, pv = attn.attn_prefill_paged(
+            bp["attn"], cfg, rms_norm(h, bp["ln1"], cfg.norm_eps),
+            positions, pk, pv, table_row)
+        h = h + a
+        u = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_mod.moe_forward(bp["moe"], cfg, u)
+        else:
+            m = swiglu(u, **bp["mlp"])
+        return h + m, (pk, pv)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v),
+                               unroll=layer_unroll())
+    return logits_from_hidden(params, cfg, h), cache._replace(k=ks, v=vs)
+
+
+def decode_step_paged(params, cfg, token, cache, active, extra_embeds=None,
+                      use_kernel=False):
+    """token: (B, 1) int32 -> logits (B, 1, V), updated paged cache.
+    ``active``: (B,) bool — inactive rows write to the trash page and
+    keep their pos."""
+    x = params["embed"][token]
+    if extra_embeds is not None:
+        x = x + extra_embeds
+
+    def body(carry, layer):
+        h = carry
+        bp, pk, pv = layer
+        a, pk, pv = attn.attn_decode_paged(
+            bp["attn"], cfg, rms_norm(h, bp["ln1"], cfg.norm_eps),
+            pk, pv, cache.table, cache.pos, active, use_kernel=use_kernel)
+        h = h + a
+        u = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_mod.moe_forward(bp["moe"], cfg, u)
+        else:
+            m = swiglu(u, **bp["mlp"])
+        return h + m, (pk, pv)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v),
+                               unroll=layer_unroll())
+    new_cache = cache._replace(k=ks, v=vs,
+                               pos=cache.pos + active.astype(jnp.int32))
+    return logits_from_hidden(params, cfg, h), new_cache
+
+
+def paged_to_dense(cache):
+    """Page tables are constant within a decode chunk, so the engine
+    gathers the pool into a dense per-slot view ONCE per chunk and runs
+    the plain ``decode_step`` inside the scan (bitwise the same values
+    the per-step paged path attends over)."""
+    return attn.paged_to_dense_kv(cache)
+
+
+def paged_restore(cache, dense, active, steps):
+    """Scatter the chunk's dense view back into the page pool; inactive
+    rows land on the trash page and keep their pos."""
+    return attn.dense_to_paged_kv(cache, dense, active, steps)

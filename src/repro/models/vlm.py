@@ -77,3 +77,38 @@ def prefill(params, cfg, tokens, patch_embeds, cache, use_flash=False):
 
 def decode_step(params, cfg, token, cache):
     return transformer.decode_step(params, cfg, token, cache)
+
+
+# ------------------------------------------------------------------
+# Paged-engine entry points
+# ------------------------------------------------------------------
+
+def init_paged_cache(params, cfg, num_slots, num_pages, page_size, max_pages,
+                     dtype=jnp.float32):
+    return transformer.init_paged_cache(params, cfg, num_slots, num_pages,
+                                        page_size, max_pages, dtype)
+
+
+def prefill_chunk(params, cfg, tokens, patch_embeds, cache, slot, frontier,
+                  valid, total):
+    """One prefill chunk with the patch/text merge done chunk-locally:
+    absolute positions < min(num_patches, total) take the (normed) patch
+    embedding, the rest the token embedding — row-for-row the same
+    values ``_merge`` produces for the whole prompt."""
+    from repro.models.layers import rms_norm
+    B, C = tokens.shape
+    npatch = patch_embeds.shape[1]
+    pe = rms_norm(patch_embeds, params["patch_ln"], cfg.norm_eps)
+    p = frontier + jnp.arange(C, dtype=jnp.int32)
+    in_img = p < jnp.minimum(npatch, total)
+    rows = pe[0][jnp.clip(p, 0, npatch - 1)][None]       # (1, C, d)
+    emb = params["embed"][tokens]
+    extra = (jnp.where(in_img[None, :, None], rows, 0.0)
+             - emb * in_img[None, :, None].astype(emb.dtype))
+    return transformer.prefill_chunk(params, cfg, tokens, cache, slot,
+                                     frontier, valid, extra_embeds=extra)
+
+
+def decode_step_paged(params, cfg, token, cache, active, use_kernel=False):
+    return transformer.decode_step_paged(params, cfg, token, cache, active,
+                                         use_kernel=use_kernel)

@@ -5,24 +5,33 @@ Layers (bottom up):
 
 * ``sampling``  — greedy / temperature / top-k token selection, one
   code path shared by the engine and the naive loop.
-* ``cache``     — slot-batch KV/SSM cache manager layered on
-  ``model.init_cache``: per-slot position vectors, single-request
-  prefill caches copied into slots.
+* ``paging``    — host-side page bookkeeping for the paged KV cache:
+  free-list block allocator, per-request worst-case reservation,
+  refcounted prefix sharing (hash-matched pages, copy-on-extend).
+* ``cache``     — slot-batch cache managers layered on
+  ``model.init_cache`` / ``model.init_paged_cache``: per-slot position
+  vectors; dense slot rows or page pools + page tables.
 * ``request``   — the host-side request record (prompt, budget, EOS,
   arrival time, per-request conditioning).
-* ``scheduler`` — fixed-size slot scheduler: FIFO admission, EOS /
-  max-new-tokens termination, slot reuse.
-* ``engine``    — the driver: per-length compiled prefill, a fused
+* ``scheduler`` — fixed-size slot scheduler: deterministic
+  min-(arrival, uid) admission, EOS / max-new-tokens termination, slot
+  reuse, prefill/decode slot phases for the paged engine.
+* ``engine``    — the driver: bucketed compiled prefill, a fused
   ``lax.scan`` multi-token decode chunk with donated cache buffers,
-  admission between chunks.
+  admission between chunks; ``paged=True`` switches to the paged KV
+  cache with chunked prefill and page-exhaustion backpressure.
 * ``naive``     — the (fixed) one-request-at-a-time reference loop the
   engine is exact-matched against.
 """
 from repro.serving.engine import Engine
 from repro.serving.naive import make_naive_fns, naive_generate
+from repro.serving.paging import (AdmitPlan, PageAllocator, PagePool,
+                                  PrefixStore, page_hashes)
 from repro.serving.request import Request
 from repro.serving.sampling import SamplingParams, make_token_selector
 from repro.serving.scheduler import Scheduler
 
-__all__ = ["Engine", "Request", "SamplingParams", "Scheduler",
-           "make_naive_fns", "make_token_selector", "naive_generate"]
+__all__ = ["AdmitPlan", "Engine", "PageAllocator", "PagePool",
+           "PrefixStore", "Request", "SamplingParams", "Scheduler",
+           "make_naive_fns", "make_token_selector", "naive_generate",
+           "page_hashes"]

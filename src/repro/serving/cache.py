@@ -1,13 +1,22 @@
-"""Slot-batch cache manager, layered on ``model.init_cache``.
+"""Slot-batch cache managers: dense and paged.
 
-The engine's decode batch owns ONE cache pytree whose batch axis is the
-slot axis (every family's cache puts batch at axis 1 — layers are
-stacked at axis 0) and whose ``pos`` leaves are (num_slots,) vectors:
-each slot keeps its own explicit token offset (the per-slot
-length/position API of models/model.py).
-
+Dense layout (``init_slot_cache``): the engine's decode batch owns ONE
+cache pytree whose batch axis is the slot axis (every family's cache
+puts batch at axis 1 — layers are stacked at axis 0) and whose ``pos``
+leaves are (num_slots,) vectors: each slot keeps its own explicit token
+offset (the per-slot length/position API of models/model.py).
 Admission copies a freshly prefilled single-request cache into a slot
 row; eviction needs no work — the next occupant overwrites the row.
+
+Paged layout (``init_paged_slot_cache``): KV leaves become page POOLS —
+``(L, num_pages, page_size, KV, hd)`` — addressed through a
+``(num_slots, max_pages)`` int32 page table (attention.PagedKVCache);
+position p of slot b lives at ``pool[table[b, p // ps], p % ps]``.
+SSM state/conv leaves stay dense per slot (O(1) per request).  Which
+pages a slot's table row names is decided host-side by
+``serving/paging.py``; admission writes the row and zeroes the slot's
+recurrent state, prefill streams chunks through the table, and nothing
+is copied on eviction — the pages are simply returned to the pool.
 """
 from __future__ import annotations
 
@@ -21,6 +30,13 @@ def _is_pos(path) -> bool:
     return bool(path) and is_pos_entry(path[-1])
 
 
+def _leaf_name(path) -> str:
+    if not path:
+        return ""
+    e = path[-1]
+    return getattr(e, "name", getattr(e, "key", "")) or ""
+
+
 def init_slot_cache(model, params, num_slots: int, max_len: int):
     """A cache whose batch axis is the slot axis and whose positions are
     per-slot (num_slots,) vectors, all starting at 0."""
@@ -28,11 +44,12 @@ def init_slot_cache(model, params, num_slots: int, max_len: int):
     return with_cache_positions(cache, jnp.zeros((num_slots,), jnp.int32))
 
 
-def _write_slot(batch_cache, one_cache, slot):
+def _write_slot(batch_cache, one_cache, slot, pos):
     def repl(path, big, small):
         if _is_pos(path):
-            # big: (num_slots,), small: () — the request's prompt length
-            return big.at[slot].set(small.astype(jnp.int32))
+            # big: (num_slots,) — ``pos`` is the request's TRUE length
+            # (one_cache.pos counts the padded bucket, see Engine)
+            return big.at[slot].set(jnp.asarray(pos, jnp.int32))
         # big: (L, num_slots, ...), small: (L, 1, ...)
         return big.at[:, slot].set(small[:, 0])
 
@@ -40,7 +57,66 @@ def _write_slot(batch_cache, one_cache, slot):
 
 
 def make_slot_writer():
-    """Jitted (batch_cache, one_cache, slot) -> batch_cache with the
-    single-request cache copied into row ``slot``.  The slot batch
-    buffer is donated — admission updates it in place."""
+    """Jitted (batch_cache, one_cache, slot, pos) -> batch_cache with the
+    single-request cache copied into row ``slot`` and that row's position
+    set to ``pos``.  The slot batch buffer is donated — admission updates
+    it in place."""
     return jax.jit(_write_slot, donate_argnums=(0,))
+
+
+# ------------------------------------------------------------------
+# Paged layout
+# ------------------------------------------------------------------
+
+def init_paged_slot_cache(model, params, num_slots: int, num_pages: int,
+                          page_size: int, max_pages: int):
+    return model.init_paged_cache(params, num_slots, num_pages, page_size,
+                                  max_pages)
+
+
+def admit_slot(cache, slot: int, table_row):
+    """Host-side slot admission: install the page-table row, reset the
+    slot's position and recurrent state (SSM conv ring + state rows must
+    not leak from the previous occupant — chunked prefill RESUMES from
+    them).  Page pools are untouched: only small leaves are copied."""
+    table_row = jnp.asarray(table_row, jnp.int32)
+
+    def repl(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return leaf.at[slot].set(0)
+        if name == "table":
+            return leaf.at[slot].set(table_row)
+        if name in ("conv", "state"):        # (L, num_slots, ...)
+            return leaf.at[:, slot].set(0)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(repl, cache)
+
+
+def set_slot_pos(cache, slot: int, pos: int):
+    """Host-side: set every pos leaf's row ``slot`` (prefill done ->
+    decode starts at the full merged prompt length)."""
+
+    def repl(path, leaf):
+        if _is_pos(path):
+            return leaf.at[slot].set(jnp.asarray(pos, jnp.int32))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(repl, cache)
+
+
+def _copy_page(cache, dst, src):
+    def repl(path, leaf):
+        if _leaf_name(path) in ("k", "v"):   # pools: (L|sites, P, ps, ...)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(repl, cache)
+
+
+def make_page_copier():
+    """Jitted (cache, dst, src) -> cache with page ``src`` of every pool
+    copied to page ``dst`` (copy-on-extend of a shared prefix page).
+    The cache is donated so the copy happens in place."""
+    return jax.jit(_copy_page, donate_argnums=(0,))

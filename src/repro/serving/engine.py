@@ -4,19 +4,43 @@ Serves any params pytree exposing the uniform ``Model`` cache API —
 in particular ``registry.get(algo).deployable(state)``, the replica
 average Parle actually ships (§1.2).
 
-Execution model:
+Execution model (dense layout — the oracle path):
 
 * ADMISSION — each free slot takes the next arrived queued request: a
-  single-request prefill (compiled once per prompt length) produces the
-  request's first token from the PREFILL logits plus a populated
-  one-slot cache, which is copied into the slot batch cache (per-slot
-  position vectors — see serving/cache.py).
+  single-request prefill (compiled once per prompt BUCKET — prompts are
+  zero-padded to the next power of two so the compile cache is bounded
+  by log2(max_len) programs, with a ``valid`` length making the padding
+  inert) produces the request's first token from the PREFILL logits
+  plus a populated one-slot cache, which is copied into the slot batch
+  cache (per-slot position vectors — see serving/cache.py).
 * DECODE — one fused chunk per engine step: ``lax.scan`` over
   ``decode_chunk`` single-token decodes with the slot cache donated,
   sampling (greedy / temperature / top-k) inside the scan.  The
   scheduler absorbs the chunk host-side, evicts finished slots (EOS or
   max-new-tokens; tokens decoded speculatively past a termination are
   discarded), and freed slots are refilled on the next step.
+
+Paged layout (``paged=True``): KV lives in fixed-size page pools behind
+per-slot page tables (serving/paging.py decides the pages, cache.py /
+attention.py hold the device layout).
+
+* Admission reserves the request's WORST-CASE pages — ceil((prompt
+  [+cond] + max_new) / page_size) — all-or-nothing: a request that
+  can't get pages waits in queue (backpressure) without reordering
+  (scheduler pops min (arrival, uid)).  Prompt pages of dense/moe
+  requests are hash-matched against the prefix store: matched pages are
+  shared (refcounted, read-only) and prefill RESUMES at the reuse
+  frontier; a partially-reused page is copy-on-extended first.
+* Prefill runs CHUNKED — ``prefill_chunk`` tokens of ONE slot per
+  engine step, interleaved with everyone else's decode instead of
+  stalling the batch; the scheduler tracks each slot's frontier.  The
+  final chunk's logits row ``valid-1`` yields the first token, the
+  prompt's full pages are published to the prefix store, and the slot
+  joins the decode batch (``active`` row mask).
+* Greedy paged decode is token-for-token identical to the dense engine
+  (which is itself bit-identical to naive.py): the gathered page extent
+  equals the dense cache extent when max_len % page_size == 0, and
+  every row's compute depends only on its own pages + position.
 
 Compile time never pollutes throughput numbers: every program is
 AOT-compiled (``jit(...).lower(...).compile()``) and the cost is
@@ -33,17 +57,34 @@ import numpy as np
 
 from repro.models.model import build_model
 from repro.serving import cache as cache_lib
+from repro.serving import paging
 from repro.serving.request import Request
 from repro.serving.sampling import SamplingParams, make_token_selector
 from repro.serving.scheduler import Scheduler
+
+# families whose prompt KV depends only on the token ids — prefix pages
+# are shareable.  vlm/audio KV depends on per-request conditioning and
+# ssm/hybrid carry non-pageable recurrent state, so they never share.
+_SHAREABLE = ("dense", "moe")
+
+
+def _bucket_len(n: int, lo: int, hi: int) -> int:
+    """Next power of two >= n, clamped to [lo, hi] but never below n."""
+    b = lo
+    while b < n:
+        b *= 2
+    return max(min(b, hi), n)
 
 
 class Engine:
     def __init__(self, cfg, params, num_slots: int = 8, max_len: int = 256,
                  decode_chunk: int = 8,
-                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 prefix_share: bool = True, use_paged_kernel: bool = False):
         self.cfg = cfg
-        self.model = build_model(cfg)
+        self.model = build_model(cfg, use_paged_kernel=use_paged_kernel)
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
@@ -51,23 +92,56 @@ class Engine:
         self.sampling = sampling
         self.selector = make_token_selector(cfg, sampling)
         self.key = jax.random.PRNGKey(seed)
+        self.paged = paged
+        self.use_paged_kernel = use_paged_kernel
 
         self.sched = Scheduler(num_slots)
-        self.cache = cache_lib.init_slot_cache(self.model, params,
-                                               num_slots, max_len)
         self.writer = cache_lib.make_slot_writer()
         tok_shape = ((num_slots, cfg.num_codebooks, 1)
                      if cfg.family == "audio" else (num_slots, 1))
         self.cur_tok = jnp.zeros(tok_shape, jnp.int32)
 
+        if paged:
+            if getattr(cfg, "sliding_window", 0):
+                raise ValueError("paged cache does not support sliding "
+                                 "windows (ring-buffer layout)")
+            self.page_size = page_size
+            self.max_pages = -(-max_len // page_size)
+            # ssd's chunk decomposition must align across prefill calls
+            qc = getattr(cfg, "ssm_chunk", 0)
+            if cfg.family in ("ssm", "hybrid") and qc:
+                prefill_chunk = -(-prefill_chunk // qc) * qc
+            self.prefill_chunk_len = prefill_chunk
+            # pages for kv-bearing families; ssm state is O(1) per slot
+            self.uses_pages = cfg.family != "ssm"
+            if num_pages is None:
+                num_pages = num_slots * self.max_pages + 1
+            self.num_pages = num_pages
+            self.pool = paging.PagePool(
+                num_pages, page_size,
+                share=prefix_share and cfg.family in _SHAREABLE)
+            self.cache = cache_lib.init_paged_slot_cache(
+                self.model, params, num_slots, num_pages, page_size,
+                self.max_pages)
+            self.page_copier = cache_lib.make_page_copier()
+            self._slot_plan = {}          # slot -> AdmitPlan
+            self._prefill_chunk_c = None  # compiled chunk-prefill program
+        else:
+            self.cache = cache_lib.init_slot_cache(self.model, params,
+                                                   num_slots, max_len)
+
         self._uid = 0
-        self._prefills = {}          # signature -> compiled prefill
+        self._prefills = {}          # bucketed signature -> compiled prefill
         self._decode = None          # compiled chunk
         self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "chunks": 0}
+                      "decode_tokens": 0, "chunks": 0, "prefill_chunks": 0}
 
     # -- submission ---------------------------------------------------
+    def _cond_extra(self, req: Request) -> int:
+        """Extra leading cache positions (audio conditioning frames)."""
+        return int(req.cond.shape[0]) if req.cond is not None else 0
+
     def submit(self, tokens, max_new_tokens: int, eos_id: Optional[int] = None,
                arrival: int = 0, cond=None, patch_embeds=None) -> int:
         req = Request(uid=self._uid, tokens=tokens,
@@ -79,6 +153,13 @@ class Engine:
                 f"{max_new_tokens} exceeds max_len {self.max_len}")
         if self.cfg.family == "vlm" and patch_embeds is None:
             raise ValueError("vlm requests need patch_embeds conditioning")
+        if self.paged and self.uses_pages:
+            need = self.pool.pages_needed(
+                self._cond_extra(req) + req.prompt_len + max_new_tokens)
+            if need > self.pool.alloc.usable:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.pool.alloc.usable} usable pages")
         self._uid += 1
         self.sched.submit(req)
         return req.uid
@@ -93,39 +174,98 @@ class Engine:
     def _prefill_compiled(self, batch, one_cache):
         sig = tuple(sorted((k, v.shape) for k, v in batch.items()))
         if sig not in self._prefills:
+            model = self.model
+
+            def prefill_bucketed(params, batch, cache, valid):
+                logits, cache = model.prefill(params, batch, cache, valid)
+                last = jax.lax.dynamic_slice_in_dim(logits, valid - 1, 1,
+                                                    axis=1)
+                return last, cache
+
             self._prefills[sig] = self._compile(
-                self.model.prefill, (self.params, batch, one_cache))
+                prefill_bucketed,
+                (self.params, batch, one_cache, jnp.int32(1)), donate=(2,))
         return self._prefills[sig]
 
     def _decode_compiled(self):
         if self._decode is None:
             model, selector, C = self.model, self.selector, self.decode_chunk
 
-            def chunk(params, tok, cache, key):
-                def body(carry, k):
-                    tok, cache = carry
-                    logits, cache = model.decode(params, {"tokens": tok},
-                                                 cache)
-                    nxt = selector(logits, k)
-                    return (nxt, cache), nxt
+            if self.paged and self.use_paged_kernel:
+                # per-step paged attention: every step reads KV straight
+                # from the pool through the Pallas kernel
+                def chunk(params, tok, cache, active, key):
+                    def body(carry, k):
+                        tok, cache = carry
+                        logits, cache = model.decode_paged(
+                            params, {"tokens": tok}, cache, active)
+                        nxt = selector(logits, k)
+                        return (nxt, cache), nxt
 
-                keys = jax.random.split(key, C)
-                (_, cache), toks = jax.lax.scan(body, (tok, cache), keys)
-                return toks, cache           # toks: (C, B, 1) | (C, B, K, 1)
+                    keys = jax.random.split(key, C)
+                    (_, cache), toks = jax.lax.scan(body, (tok, cache), keys)
+                    return toks, cache
 
-            self._decode = self._compile(
-                chunk, (self.params, self.cur_tok, self.cache, self.key),
-                donate=(2,))
+                self._decode = self._compile(
+                    chunk, (self.params, self.cur_tok, self.cache,
+                            jnp.zeros((self.num_slots,), bool), self.key),
+                    donate=(2,))
+            elif self.paged:
+                # hoisted gather: page tables are constant across the
+                # chunk, so gather pool -> dense view once, scan the
+                # plain dense decode (bitwise the same values), scatter
+                # back once (inactive rows -> trash page, pos frozen)
+                def chunk(params, tok, cache, active, key):
+                    dense = model.paged_to_dense(cache)
+
+                    def body(carry, k):
+                        tok, dense = carry
+                        logits, dense = model.decode(params,
+                                                     {"tokens": tok}, dense)
+                        nxt = selector(logits, k)
+                        return (nxt, dense), nxt
+
+                    keys = jax.random.split(key, C)
+                    (_, dense), toks = jax.lax.scan(body, (tok, dense), keys)
+                    return toks, model.paged_restore(cache, dense, active, C)
+
+                self._decode = self._compile(
+                    chunk, (self.params, self.cur_tok, self.cache,
+                            jnp.zeros((self.num_slots,), bool), self.key),
+                    donate=(2,))
+            else:
+                def chunk(params, tok, cache, key):
+                    def body(carry, k):
+                        tok, cache = carry
+                        logits, cache = model.decode(params, {"tokens": tok},
+                                                     cache)
+                        nxt = selector(logits, k)
+                        return (nxt, cache), nxt
+
+                    keys = jax.random.split(key, C)
+                    (_, cache), toks = jax.lax.scan(body, (tok, cache), keys)
+                    return toks, cache       # toks: (C, B, 1) | (C, B, K, 1)
+
+                self._decode = self._compile(
+                    chunk, (self.params, self.cur_tok, self.cache, self.key),
+                    donate=(2,))
         return self._decode
 
-    # -- the engine loop ----------------------------------------------
+    # -- dense admission ----------------------------------------------
     def _prefill_batch(self, req: Request):
-        batch = {"tokens": jnp.asarray(req.tokens)[None]}
+        """Bucket-padded single-request batch + the true valid length."""
+        toks = np.asarray(req.tokens, np.int32)
+        T = toks.shape[-1]
+        bucket = _bucket_len(T, 8, self.max_len - self._cond_extra(req))
+        pad = bucket - T
+        if pad:
+            toks = np.pad(toks, [(0, 0)] * (toks.ndim - 1) + [(0, pad)])
+        batch = {"tokens": jnp.asarray(toks)[None]}
         if req.cond is not None:
             batch["cond"] = jnp.asarray(req.cond)[None]
         if req.patch_embeds is not None:
             batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
-        return batch
+        return batch, T
 
     def _admit(self):
         while True:
@@ -133,41 +273,170 @@ class Engine:
             if not pairs:
                 return
             for slot, req in pairs:
-                batch = self._prefill_batch(req)
+                batch, valid = self._prefill_batch(req)
                 one_cache = self.model.init_cache(self.params, 1, self.max_len)
                 prefill = self._prefill_compiled(batch, one_cache)
                 t0 = time.perf_counter()
-                logits, one_cache = prefill(self.params, batch, one_cache)
+                logits, one_cache = prefill(self.params, batch, one_cache,
+                                            jnp.int32(valid))
                 self.key, k = jax.random.split(self.key)
                 first = self.selector(logits, k)      # (1, 1) | (1, K, 1)
                 first_host = np.asarray(first[0, ..., 0])
                 self.stats["prefill_s"] += time.perf_counter() - t0
                 self.stats["prefill_tokens"] += req.prompt_len
+                total = self._cond_extra(req) + req.prompt_len
                 self.cache = self.writer(self.cache, one_cache,
-                                         jnp.int32(slot))
+                                         jnp.int32(slot), jnp.int32(total))
                 self.cur_tok = self.cur_tok.at[slot].set(first[0])
                 self.sched.place(slot, req, first_host)
                 # a request finishing on its first token frees the slot
                 # again — the outer while loop re-runs admission
 
+    # -- paged admission + chunked prefill ----------------------------
+    def _admit_paged(self):
+        while self.sched.free_slots():
+            req = self.sched._pop_arrived()
+            if req is None:
+                return
+            total = self._cond_extra(req) + req.prompt_len
+            if self.uses_pages:
+                share_toks = (np.asarray(req.tokens, np.int32)
+                              if self.cfg.family in _SHAREABLE else None)
+                plan = self.pool.admit(share_toks, total,
+                                       total + req.max_new_tokens)
+                if plan is None:
+                    # backpressure: wait for pages; (arrival, uid) order
+                    # is restored by the deterministic pop
+                    self.sched.requeue(req)
+                    return
+            else:
+                plan = paging.AdmitPlan(pages=[])
+            slot = self.sched.free_slots()[0]
+            self._slot_plan[slot] = plan
+            if plan.cow is not None:
+                dst, src = plan.cow
+                self.cache = self.page_copier(self.cache, jnp.int32(dst),
+                                              jnp.int32(src))
+            row = np.zeros((self.max_pages,), np.int32)
+            row[:len(plan.pages)] = plan.pages
+            self.cache = cache_lib.admit_slot(self.cache, slot, row)
+            self.sched.place_prefilling(slot, req, frontier=plan.reuse_len)
+
+    def _chunk_batch(self, req: Request, frontier: int):
+        """The (1, C)-token slice of the prompt at ``frontier`` (merged
+        coordinates), zero-filled for cond-region and padded positions."""
+        C = self.prefill_chunk_len
+        ce = self._cond_extra(req)
+        toks = np.asarray(req.tokens, np.int32)
+        if toks.ndim == 1:
+            chunk = np.zeros((C,), np.int32)
+            lo = max(frontier - ce, 0)
+            span = toks[lo:lo + C]           # frontier >= ce for text (ce=0)
+            chunk[:span.shape[0]] = span
+        else:                                # audio (K, T), merged positions
+            K, T = toks.shape
+            chunk = np.zeros((K, C), np.int32)
+            for j in range(C):
+                t = frontier + j - ce
+                if 0 <= t < T:
+                    chunk[:, j] = toks[:, t]
+        batch = {"tokens": jnp.asarray(chunk)[None]}
+        if req.cond is not None:
+            batch["cond"] = jnp.asarray(req.cond)[None]
+        if req.patch_embeds is not None:
+            batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
+        return batch
+
+    def _prefill_chunk_compiled(self, batch):
+        if self._prefill_chunk_c is None:
+            self._prefill_chunk_c = self._compile(
+                self.model.prefill_chunk,
+                (self.params, batch, self.cache, jnp.int32(0), jnp.int32(0),
+                 jnp.int32(1), jnp.int32(1)),
+                donate=(2,))
+        return self._prefill_chunk_c
+
+    def _prefill_step_paged(self):
+        """Advance every prefilling slot by one chunk; slots whose prompt
+        completes get their first token and join the decode batch."""
+        for slot in self.sched.prefilling_slots():
+            rec = self.sched.slots[slot]
+            req = rec.request
+            total = self._cond_extra(req) + req.prompt_len
+            f = rec.frontier
+            valid = min(self.prefill_chunk_len, total - f)
+            batch = self._chunk_batch(req, f)
+            prog = self._prefill_chunk_compiled(batch)
+            t0 = time.perf_counter()
+            logits, self.cache = prog(self.params, batch, self.cache,
+                                      jnp.int32(slot), jnp.int32(f),
+                                      jnp.int32(valid), jnp.int32(total))
+            rec.frontier = f + valid
+            done = rec.frontier >= total
+            if done:
+                lg = logits[:, valid - 1:valid]   # (1,1,V) | (1,1,K,V)
+                self.key, k = jax.random.split(self.key)
+                first = self.selector(lg, k)
+                first_host = np.asarray(first[0, ..., 0])
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self.stats["prefill_tokens"] += valid
+            self.stats["prefill_chunks"] += 1
+            if done:
+                plan = self._slot_plan[slot]
+                if self.uses_pages:
+                    # prompt pages are final now: publish for sharing
+                    self.pool.finalize_prompt(plan, total)
+                self.cache = cache_lib.set_slot_pos(self.cache, slot, total)
+                self.cur_tok = self.cur_tok.at[slot].set(first[0])
+                if self.sched.finish_prefill(slot, first_host):
+                    self._release_slot(slot)
+
+    def _release_slot(self, slot: int):
+        plan = self._slot_plan.pop(slot, None)
+        if plan is not None and self.uses_pages:
+            self.pool.release(plan)
+
+    # -- the engine loop ----------------------------------------------
     def step(self) -> None:
-        """One engine step: admit into free slots, then decode one chunk."""
-        self._admit()
-        if not self.sched.active_slots():
-            self.sched.step_count += 1        # idle tick: arrivals advance
-            return
-        decode = self._decode_compiled()
-        self.key, k = jax.random.split(self.key)
-        t0 = time.perf_counter()
-        toks, self.cache = decode(self.params, self.cur_tok, self.cache, k)
+        """One engine step: admit, advance prefills (paged), decode one
+        chunk."""
+        if self.paged:
+            self._admit_paged()
+            self._prefill_step_paged()
+            self._admit_paged()       # finished-on-first-token slots refill
+        else:
+            self._admit()
+        if self.paged:
+            dec = self.sched.decoding_slots()
+            if not dec:
+                self.sched.tick()     # arrivals advance while prefilling
+                return
+            active = np.zeros((self.num_slots,), bool)
+            active[dec] = True
+            decode = self._decode_compiled()
+            self.key, k = jax.random.split(self.key)
+            t0 = time.perf_counter()
+            toks, self.cache = decode(self.params, self.cur_tok, self.cache,
+                                      jnp.asarray(active), k)
+        else:
+            if not self.sched.active_slots():
+                self.sched.tick()     # idle tick: arrivals advance
+                return
+            decode = self._decode_compiled()
+            self.key, k = jax.random.split(self.key)
+            t0 = time.perf_counter()
+            toks, self.cache = decode(self.params, self.cur_tok, self.cache, k)
         self.cur_tok = toks[-1]
         toks_host = np.asarray(toks[..., 0])  # blocks: (C, B) | (C, B, K)
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += self.decode_chunk
         self.stats["chunks"] += 1
         emitted_before = self.sched.tokens_emitted
-        self.sched.absorb_chunk(toks_host)
+        freed = self.sched.absorb_chunk(toks_host)
         self.stats["decode_tokens"] += self.sched.tokens_emitted - emitted_before
+        if self.paged:
+            for slot in freed:
+                self._release_slot(slot)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
         """Drain the queue; returns {uid: emitted tokens (G,) | (K, G)}."""
@@ -182,12 +451,30 @@ class Engine:
     # -- reporting ----------------------------------------------------
     def throughput(self) -> Dict[str, float]:
         """Tokens/s over KEPT tokens only — idle-slot rows and discarded
-        speculative post-termination tokens never count."""
+        speculative post-termination tokens never count.
+
+        ``slot_utilization`` is the honest occupancy: kept decode-token
+        positions over the chunk capacity ``decode_steps * num_slots``
+        (decode_s pays for the full capacity — idle rows, prefilling
+        rows and speculative post-EOS steps are computed either way);
+        ``wasted_decode_tokens`` is the capacity that produced nothing.
+        """
         s = self.stats
-        return {
+        K = self.cfg.num_codebooks if self.cfg.family == "audio" else 1
+        kept = s["decode_tokens"] / K          # token POSITIONS kept
+        capacity = s["decode_steps"] * self.num_slots
+        out = {
             "compile_s": round(s["compile_s"], 3),
             "prefill_tokens_per_s": round(
                 s["prefill_tokens"] / max(s["prefill_s"], 1e-9), 1),
             "decode_tokens_per_s": round(
                 s["decode_tokens"] / max(s["decode_s"], 1e-9), 1),
+            "slot_utilization": round(kept / max(capacity, 1), 4),
+            "wasted_decode_tokens": int(capacity - kept),
         }
+        if self.paged:
+            out["prefix_hit_rate"] = round(self.pool.prefix_hit_rate(), 4) \
+                if self.uses_pages else 0.0
+            if self.uses_pages:
+                out["cow_copies"] = self.pool.stats["cow_copies"]
+        return out

@@ -42,6 +42,10 @@ class SlotRecord:
     request: Request
     emitted: list = field(default_factory=list)   # per-step int or (K,) array
     done: bool = False
+    phase: str = "decode"                # "prefill" (paged engine, chunked
+                                         # prefill in flight) or "decode"
+    frontier: int = 0                    # cache positions prefilled so far
+                                         # (merged coords: audio counts cond)
 
     def tokens(self) -> np.ndarray:
         """Emitted tokens as (G,) — or (K, G) for audio streams."""

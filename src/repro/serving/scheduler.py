@@ -1,10 +1,22 @@
 """Slot-based scheduler for the continuous-batching engine.
 
 A fixed-size decode batch of ``num_slots`` rows; requests are admitted
-FIFO into free slots (respecting their ``arrival`` step) and evicted
-when they terminate — EOS or max-new-tokens — so the slot is reused by
-the next queued request.  Pure host-side bookkeeping: no jax, fully
+into free slots (respecting their ``arrival`` step) and evicted when
+they terminate — EOS or max-new-tokens — so the slot is reused by the
+next queued request.  Pure host-side bookkeeping: no jax, fully
 unit-testable without a model.
+
+Admission policy: among arrived requests the scheduler always picks the
+minimum ``(arrival, uid)`` — explicitly deterministic, independent of
+submission order and of paged-backpressure requeues (a request bounced
+back for lack of pages re-enters the queue without changing its place
+in line; ties on ``arrival`` break by ``uid``).
+
+The paged engine additionally runs slots through a PREFILL phase
+(``SlotRecord.phase``): a chunked-prefill slot occupies its row and
+advances ``frontier`` each engine step but emits nothing until
+``finish_prefill`` flips it to the decode phase with its first token.
+``absorb_chunk`` only feeds decode-phase slots.
 """
 from __future__ import annotations
 
@@ -48,11 +60,23 @@ class Scheduler:
         return pairs
 
     def _pop_arrived(self) -> Optional[Request]:
+        """Pop the arrived request with the smallest ``(arrival, uid)``."""
+        best = None
         for j, req in enumerate(self.queue):
-            if req.arrival <= self.step_count:
-                del self.queue[j]
-                return req
-        return None
+            if req.arrival <= self.step_count and (
+                    best is None or (req.arrival, req.uid) < best[1]):
+                best = (j, (req.arrival, req.uid))
+        if best is None:
+            return None
+        req = self.queue[best[0]]
+        del self.queue[best[0]]
+        return req
+
+    def requeue(self, req: Request) -> None:
+        """Return a popped request to the queue (paged backpressure: no
+        pages available).  Position is irrelevant — ``_pop_arrived`` is
+        a deterministic min over the whole queue."""
+        self.queue.append(req)
 
     def place(self, slot: int, req: Request, first_token) -> bool:
         """Occupy ``slot`` with ``req`` whose first token (from the
@@ -61,6 +85,27 @@ class Scheduler:
         assert self.slots[slot] is None, f"slot {slot} occupied"
         rec = SlotRecord(request=req)
         self.slots[slot] = rec
+        if self._append(rec, first_token):
+            self._evict(slot)
+            return True
+        return False
+
+    def place_prefilling(self, slot: int, req: Request, frontier: int) -> None:
+        """Occupy ``slot`` with a request whose chunked prefill is still
+        in flight.  ``frontier`` is where prefill resumes (> 0 on a
+        prefix-cache hit).  The slot emits nothing until
+        ``finish_prefill``."""
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        self.slots[slot] = SlotRecord(request=req, phase="prefill",
+                                      frontier=frontier)
+
+    def finish_prefill(self, slot: int, first_token) -> bool:
+        """Flip a prefilling slot to the decode phase, recording the
+        first token (from the final prefill chunk's logits).  Returns
+        True if the request terminated immediately."""
+        rec = self.slots[slot]
+        assert rec is not None and rec.phase == "prefill"
+        rec.phase = "decode"
         if self._append(rec, first_token):
             self._evict(slot)
             return True
@@ -90,7 +135,7 @@ class Scheduler:
         past EOS and are discarded).  Returns the freed slot indices."""
         freed = []
         active = [(i, rec) for i, rec in enumerate(self.slots)
-                  if rec is not None]
+                  if rec is not None and rec.phase == "decode"]
         for i, rec in active:
             for c in range(chunk_tokens.shape[0]):
                 if self._append(rec, chunk_tokens[c, i]):
@@ -101,9 +146,22 @@ class Scheduler:
         self.step_count += 1
         return freed
 
+    def tick(self) -> None:
+        """Advance the step clock on an engine step with no decode chunk
+        (paged engine busy prefilling) so staggered arrivals progress."""
+        self.step_count += 1
+
     # -- state --------------------------------------------------------
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def decoding_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.phase == "decode"]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.phase == "prefill"]
 
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.active_slots())

@@ -133,3 +133,57 @@ def test_ssd_chunked_jnp_path_vs_naive(key):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
                                rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------
+# paged_attention
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,KV,hd", [
+    (4, 2, 32),
+    pytest.param(4, 4, 64, marks=pytest.mark.slow),     # MHA, no GQA fold
+    pytest.param(8, 2, 16, marks=pytest.mark.slow),     # wide GQA group
+])
+@pytest.mark.parametrize("ps,M", [
+    (16, 4),
+    pytest.param(8, 7, marks=pytest.mark.slow),         # odd page count
+])
+def test_paged_attention_vs_oracle(H, KV, hd, ps, M, key):
+    """The Pallas paged-decode kernel against the gather-then-softmax
+    oracle: random page tables (rows share pages, trash page unused
+    entries) and ragged per-row lengths."""
+    B, P = 3, 12
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k_pool = jax.random.normal(ks[1], (P, ps, KV, hd))
+    v_pool = jax.random.normal(ks[2], (P, ps, KV, hd))
+    # each row gets a random permutation of usable pages; entries past
+    # the row's live extent point at the trash page (id 0)
+    rng = np.random.default_rng(0)
+    table = np.stack([rng.permutation(np.arange(1, P))[:M] for _ in range(B)])
+    lengths = np.array([1, ps * M, ps * (M - 1) + ps // 2], np.int32)[:B]
+    for b in range(B):
+        used = -(-int(lengths[b]) // ps)
+        table[b, used:] = 0
+    o_k = ops.paged_attention(q, k_pool, v_pool, jnp.asarray(table, jnp.int32),
+                              jnp.asarray(lengths))
+    o_r = ref.paged_attention(q, k_pool, v_pool, jnp.asarray(table, jnp.int32),
+                              jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_paged_attention_shared_pages(key):
+    """Two rows whose tables name the SAME pages (prefix sharing) score
+    identically up to their common live extent."""
+    H, KV, hd, ps, M, P = 4, 2, 32, 8, 3, 8
+    ks = jax.random.split(key, 3)
+    q1 = jax.random.normal(ks[0], (1, H, hd))
+    q = jnp.concatenate([q1, q1], axis=0)
+    k_pool = jax.random.normal(ks[1], (P, ps, KV, hd))
+    v_pool = jax.random.normal(ks[2], (P, ps, KV, hd))
+    table = jnp.asarray([[3, 5, 1], [3, 5, 2]], jnp.int32)  # shared prefix
+    lengths = jnp.asarray([2 * ps, 2 * ps], jnp.int32)      # live < page 3
+    o = ops.paged_attention(q, k_pool, v_pool, table, lengths)
+    np.testing.assert_array_equal(np.asarray(o[0]), np.asarray(o[1]))

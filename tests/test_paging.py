@@ -1,0 +1,194 @@
+"""Host-side paging core: allocator refcounts, chain-hash prefix
+matching, admission backpressure, copy-on-extend plans, store eviction —
+plus the scheduler's deterministic (arrival, uid) admission order.  No
+jax, no model: pure bookkeeping unit tests."""
+import numpy as np
+import pytest
+
+from repro.serving import Request, Scheduler
+from repro.serving.paging import (TRASH_PAGE, AdmitPlan, PageAllocator,
+                                  PagePool, PrefixStore, page_hashes)
+
+
+# ------------------------------------------------------------------
+# allocator
+# ------------------------------------------------------------------
+
+def test_allocator_round_trip():
+    a = PageAllocator(5)                       # pages 1..4 usable
+    assert a.usable == 4 and a.num_free == 4
+    pages = a.alloc(3)
+    assert pages == [1, 2, 3]                  # deterministic ascending
+    assert TRASH_PAGE not in pages             # page 0 never allocated
+    assert a.num_free == 1
+    for p in pages:
+        assert a.release(p)                    # refcount 1 -> freed
+    assert a.num_free == 4
+    # freed pages are reusable
+    assert sorted(a.alloc(4)) == [1, 2, 3, 4]
+
+
+def test_allocator_all_or_nothing():
+    a = PageAllocator(4)
+    assert a.alloc(2) is not None
+    before = a.num_free
+    assert a.alloc(2) is None                  # only 1 free: refuse whole ask
+    assert a.num_free == before                # nothing leaked
+
+
+def test_allocator_refcounted_sharing():
+    a = PageAllocator(3)
+    (p,) = a.alloc(1)
+    a.retain(p)
+    assert a.refcount(p) == 2
+    assert not a.release(p)                    # still one holder
+    assert a.release(p)                        # last reference frees
+    assert a.num_free == 2
+    with pytest.raises(AssertionError):
+        a.release(p)                           # double-free asserts
+
+
+def test_allocator_reserves_trash_page():
+    with pytest.raises(ValueError):
+        PageAllocator(1)                       # nothing usable besides trash
+
+
+# ------------------------------------------------------------------
+# chain hashes + prefix store
+# ------------------------------------------------------------------
+
+def test_page_hashes_chain_near_miss():
+    ps = 4
+    a = np.arange(12, dtype=np.int32)
+    b = a.copy()
+    b[1] += 1                                  # differ inside page 0
+    ha, hb = page_hashes(a, ps), page_hashes(b, ps)
+    assert len(ha) == 3                        # full pages only
+    # a single early token difference changes EVERY chained hash
+    assert all(x != y for x, y in zip(ha, hb))
+    # same prefix, divergence in page 2: pages 0-1 still match
+    c = a.copy()
+    c[9] += 1
+    hc = page_hashes(c, ps)
+    assert ha[0] == hc[0] and ha[1] == hc[1] and ha[2] != hc[2]
+    # partial trailing page contributes no hash
+    assert len(page_hashes(a[:11], ps)) == 2
+
+
+def test_prefix_store_longest_chain_and_lru():
+    a = PageAllocator(8)
+    s = PrefixStore()
+    pages = a.alloc(3)
+    hashes = page_hashes(np.arange(12, dtype=np.int32), 4)
+    for h, p in zip(hashes, pages):
+        assert s.insert(h, p, a)
+        assert a.refcount(p) == 2              # store holds a reference
+    assert s.match(hashes) == pages
+    # a near-miss prompt matches only the common full-page chain
+    other = np.arange(12, dtype=np.int32)
+    other[5] += 1
+    assert s.match(page_hashes(other, 4)) == pages[:1]
+    # first writer wins on duplicate insert
+    assert not s.insert(hashes[0], 99, a)
+    assert s.match(hashes)[0] == pages[0]
+    # eviction drops oldest and releases its reference
+    assert s.evict_lru(a)
+    assert a.refcount(pages[0]) >= 1           # match() bumped recency; some
+    assert len(s) == 2                         # entry is gone either way
+
+
+# ------------------------------------------------------------------
+# pool admission
+# ------------------------------------------------------------------
+
+def test_admit_backpressure_no_side_effects():
+    pool = PagePool(num_pages=5, page_size=4)  # 4 usable
+    p1 = pool.admit(None, 8, 16)               # needs 4 pages: fits exactly
+    assert p1 is not None and len(p1.pages) == 4
+    free_before = pool.alloc.num_free
+    assert pool.admit(None, 4, 8) is None      # needs 2, has 0: refused
+    assert pool.alloc.num_free == free_before  # rollback left no trace
+    pool.release(p1)
+    assert pool.alloc.num_free == 4
+    assert pool.admit(None, 4, 8) is not None  # serveable once freed
+
+
+def test_admit_prefix_hit_and_cow():
+    ps = 4
+    pool = PagePool(num_pages=12, page_size=ps)
+    prompt = np.arange(10, dtype=np.int32)     # 2 full pages + tail
+    plan = pool.admit(prompt, 10, 14)
+    assert plan.reuse_len == 0 and plan.cow is None
+    pool.finalize_prompt(plan, 10)             # publishes pages 0-1
+
+    # same 2-page prefix, different tail: page-aligned resume, no COW
+    p2 = np.concatenate([prompt[:8], np.array([77, 78], np.int32)])
+    plan2 = pool.admit(p2, 10, 14)
+    assert plan2.num_shared == 2 and plan2.reuse_len == 8
+    assert plan2.cow is None
+    assert plan2.pages[:2] == plan.pages[:2]   # the very same shared pages
+    assert pool.alloc.refcount(plan.pages[0]) >= 3  # req1 + store + req2
+
+    # page-aligned prompt (exactly 2 pages): reuse caps at prompt_len-1
+    # = 7, INSIDE matched page 1 -> copy-on-extend
+    plan3 = pool.admit(prompt[:8].copy(), 8, 12)
+    assert plan3.reuse_len == 7 and plan3.num_shared == 1
+    dst, src = plan3.cow
+    assert src == plan.pages[1]                # the matched-but-partial page
+    assert dst == plan3.pages[1]               # first fresh page extends it
+    assert pool.stats["cow_copies"] == 1
+
+    pool.release(plan2)
+    pool.release(plan3)
+    pool.release(plan)
+    # store still holds its published pages; nothing double-freed
+    assert pool.alloc.num_free == pool.alloc.usable - 2
+
+
+def test_admit_evicts_store_under_pressure():
+    ps = 4
+    pool = PagePool(num_pages=6, page_size=ps)  # 5 usable
+    plan = pool.admit(np.arange(8, dtype=np.int32), 8, 12)   # 3 pages
+    pool.finalize_prompt(plan, 8)
+    pool.release(plan)                          # store keeps pages 0-1 alive
+    assert pool.alloc.num_free == 3
+    plan2 = pool.admit(None, 16, 20)            # needs 5: must evict store
+    assert plan2 is not None and len(plan2.pages) == 5
+    assert pool.stats["store_evictions"] == 2
+
+
+def test_last_token_never_reused():
+    """Even a fully-cached prompt recomputes its final position — the
+    first generated token comes from that position's logits."""
+    ps = 4
+    pool = PagePool(num_pages=10, page_size=ps)
+    prompt = np.arange(8, dtype=np.int32)       # exactly 2 pages
+    plan = pool.admit(prompt, 8, 12)
+    pool.finalize_prompt(plan, 8)
+    plan2 = pool.admit(prompt.copy(), 8, 12)
+    assert plan2.reuse_len == 7 < 8             # capped below prompt_len
+
+
+# ------------------------------------------------------------------
+# scheduler admission order (satellite: explicit deterministic policy)
+# ------------------------------------------------------------------
+
+def test_scheduler_pops_min_arrival_uid():
+    s = Scheduler(1)
+    # submitted out of order; uids 2,0,1 all arrived (arrival 0), plus a
+    # later arrival that must not jump the line
+    s.submit(Request(uid=2, tokens=np.arange(3), max_new_tokens=2))
+    s.submit(Request(uid=0, tokens=np.arange(3), max_new_tokens=2))
+    s.submit(Request(uid=1, tokens=np.arange(3), max_new_tokens=2, arrival=0))
+    order = [s._pop_arrived().uid for _ in range(3)]
+    assert order == [0, 1, 2]                   # ties on arrival break by uid
+
+
+def test_scheduler_requeue_keeps_place_in_line():
+    s = Scheduler(1)
+    s.submit(Request(uid=0, tokens=np.arange(3), max_new_tokens=2))
+    s.submit(Request(uid=1, tokens=np.arange(3), max_new_tokens=2))
+    req = s._pop_arrived()
+    assert req.uid == 0
+    s.requeue(req)                              # bounced (no pages)
+    assert s._pop_arrived().uid == 0            # still first, not last

@@ -1,0 +1,264 @@
+"""The paged serving engine's exact-match contract: paged == dense ==
+naive greedy tokens across families (the dense engine is the oracle,
+itself exact-matched against naive.py in test_serving_engine.py), plus
+chunked long-prompt prefill, prefix sharing end-to-end, page-exhaustion
+backpressure, the bounded prefill compile cache, and the honest
+utilization stats.
+
+Tier-1 runs the dense-family paths; the other families ride the slow
+lane (and the CI serving lane, which overrides the tier-1 filter).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CONFIGS, family_params
+from repro.models.model import build_model
+from repro.serving import Engine, SamplingParams
+
+GEN = 8
+MAX_LEN = 32
+MIXED_LENS = (5, 9, 12, 7)
+
+_PARAMS = {}
+
+
+def _params(cfg, key):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = build_model(cfg).init(key)
+    return _PARAMS[cfg.name]
+
+
+def _request(cfg, key, i, T):
+    kk = jax.random.fold_in(key, 1000 + i)
+    shape = (cfg.num_codebooks, T) if cfg.family == "audio" else (T,)
+    req = {"tokens": np.asarray(
+        jax.random.randint(kk, shape, 0, cfg.vocab_size), np.int32)}
+    if cfg.family == "vlm":
+        req["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(kk, 1), (cfg.num_patches, cfg.d_model))
+    if cfg.family == "audio":
+        req["cond"] = jax.random.normal(
+            jax.random.fold_in(kk, 2), (cfg.cond_len, cfg.d_model))
+    return req
+
+
+def _run(cfg, params, reqs, *, paged, max_len=MAX_LEN, arrivals=None,
+         gen=GEN, num_slots=2, **kw):
+    eng = Engine(cfg, params, num_slots=num_slots, max_len=max_len,
+                 decode_chunk=3, paged=paged, **kw)
+    for i, r in enumerate(reqs):
+        eng.submit(r["tokens"], max_new_tokens=gen, cond=r.get("cond"),
+                   patch_embeds=r.get("patch_embeds"),
+                   arrival=0 if arrivals is None else arrivals[i])
+    return eng.run(), eng
+
+
+# ------------------------------------------------------------------
+# paged == dense exact match (the dense engine is the oracle)
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", family_params())
+def test_paged_matches_dense_exactly(family, key):
+    """Greedy paged decode emits token-for-token what the dense engine
+    emits — mixed prompt lengths, fewer slots than requests, prefill
+    chunk smaller than the longest prompt (chunked prefill exercised)."""
+    cfg = FAMILY_CONFIGS[family]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    dense, _ = _run(cfg, params, reqs, paged=False)
+    paged, eng = _run(cfg, params, reqs, paged=True, page_size=16,
+                      prefill_chunk=8)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i], err_msg=f"req {i}")
+    tp = eng.throughput()
+    assert 0.0 < tp["slot_utilization"] <= 1.0
+    assert tp["wasted_decode_tokens"] >= 0
+
+
+@pytest.mark.parametrize("family", [
+    "dense",
+    pytest.param("hybrid", marks=pytest.mark.slow),
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("audio", marks=pytest.mark.slow),
+])
+def test_paged_kernel_matches_dense(family, key):
+    """The Pallas paged-attention decode path (use_paged_kernel) stays
+    token-exact against the dense engine."""
+    cfg = FAMILY_CONFIGS[family]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS[:2])]
+    dense, _ = _run(cfg, params, reqs, paged=False)
+    paged, _ = _run(cfg, params, reqs, paged=True, page_size=16,
+                    prefill_chunk=8, use_paged_kernel=True)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i], err_msg=f"req {i}")
+
+
+def test_paged_long_prompt_many_chunks(key):
+    """A prompt spanning many prefill chunks and many pages."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    T, max_len = 49, 64
+    req = {"tokens": np.asarray(
+        jax.random.randint(key, (T,), 0, cfg.vocab_size), np.int32)}
+    dense, _ = _run(cfg, params, [req], paged=False, max_len=max_len)
+    paged, eng = _run(cfg, params, [req], paged=True, max_len=max_len,
+                      page_size=8, prefill_chunk=8)
+    np.testing.assert_array_equal(paged[0], dense[0])
+    assert eng.stats["prefill_chunks"] >= -(-T // 8)
+
+
+def test_paged_staggered_arrivals_match(key):
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    dense, _ = _run(cfg, params, reqs, paged=False)
+    paged, _ = _run(cfg, params, reqs, paged=True, page_size=16,
+                    prefill_chunk=8, arrivals=list(range(len(reqs))))
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i], err_msg=f"req {i}")
+
+
+def test_paged_sampling_topk1_matches_dense(key):
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS[:2])]
+    sp = SamplingParams(temperature=0.8, top_k=1)
+    dense, _ = _run(cfg, params, reqs, paged=False, sampling=sp)
+    paged, _ = _run(cfg, params, reqs, paged=True, page_size=16,
+                    prefill_chunk=8, sampling=sp)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i])
+
+
+# ------------------------------------------------------------------
+# prefix sharing end-to-end
+# ------------------------------------------------------------------
+
+def test_prefix_sharing_hits_without_changing_tokens(key):
+    """Staggered requests sharing a long system prompt: the later
+    requests resume prefill past the shared pages (hit rate > 0) and
+    still emit exactly the dense engine's tokens."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    shared = np.asarray(jax.random.randint(key, (32,), 0, cfg.vocab_size),
+                        np.int32)
+    reqs = [{"tokens": np.concatenate([shared, np.asarray(
+        jax.random.randint(jax.random.fold_in(key, i), (4,),
+                           0, cfg.vocab_size), np.int32)])}
+            for i in range(4)]
+    # request 0 finishes its prefill (publishing pages) before the rest
+    arrivals = [0, 6, 6, 6]
+    dense, _ = _run(cfg, params, reqs, paged=False, max_len=64,
+                    arrivals=arrivals, num_slots=4)
+    paged, eng = _run(cfg, params, reqs, paged=True, max_len=64,
+                      arrivals=arrivals, num_slots=4, page_size=16,
+                      prefill_chunk=16)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i], err_msg=f"req {i}")
+    assert eng.pool.prefix_hit_rate() > 0
+    assert eng.pool.stats["prefix_hit_tokens"] == 3 * 32  # 2 pages x 3 reqs
+    assert eng.throughput()["prefix_hit_rate"] > 0
+
+
+def test_prefix_sharing_identical_prompt_cow(key):
+    """Resubmitting an identical prompt reuses all full pages but still
+    recomputes the last position (copy-on-extend of the final page) —
+    outputs stay exact."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    prompt = np.asarray(jax.random.randint(key, (32,), 0, cfg.vocab_size),
+                        np.int32)
+    reqs = [{"tokens": prompt}, {"tokens": prompt.copy()}]
+    dense, _ = _run(cfg, params, reqs, paged=False, max_len=64,
+                    arrivals=[0, 6])
+    paged, eng = _run(cfg, params, reqs, paged=True, max_len=64,
+                      arrivals=[0, 6], page_size=16, prefill_chunk=16)
+    np.testing.assert_array_equal(paged[0], dense[0])
+    np.testing.assert_array_equal(paged[1], dense[1])
+    assert eng.pool.stats["cow_copies"] == 1
+    assert eng.pool.stats["prefix_hit_tokens"] == 31   # prompt_len - 1
+
+
+# ------------------------------------------------------------------
+# backpressure
+# ------------------------------------------------------------------
+
+def test_page_exhaustion_backpressures_not_crashes(key):
+    """A pool too small for all requests at once: admission waits for
+    pages (requests queue in (arrival, uid) order) and every request
+    still completes with the exact dense tokens."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    reqs = [_request(cfg, key, i, T) for i, T in enumerate(MIXED_LENS)]
+    dense, _ = _run(cfg, params, reqs, paged=False)
+    # each request needs ceil((12+8)/16) <= 2 pages; 3 usable pages
+    # -> at most one two-page resident plus one more, never all four
+    paged, eng = _run(cfg, params, reqs, paged=True, num_slots=4,
+                      page_size=16, prefill_chunk=8, num_pages=4,
+                      prefix_share=False)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(paged[i], dense[i], err_msg=f"req {i}")
+    assert eng.pool.alloc.num_free == eng.pool.alloc.usable  # all returned
+
+
+def test_submit_rejects_unserveable_request(key):
+    """A single request whose worst case exceeds the whole pool must be
+    rejected at submit time (it could never be admitted)."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, paged=True,
+                 page_size=16, num_pages=2)        # 1 usable page
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(12, dtype=np.int32), max_new_tokens=GEN)
+
+
+def test_paged_rejects_sliding_window(key):
+    import dataclasses
+    cfg = FAMILY_CONFIGS["dense"]
+    swa = dataclasses.replace(cfg, sliding_window=16)
+    params = _params(cfg, key)
+    with pytest.raises(ValueError):
+        Engine(swa, params, paged=True)
+
+
+# ------------------------------------------------------------------
+# bounded prefill compile cache (satellite 1)
+# ------------------------------------------------------------------
+
+def test_prefill_compile_cache_is_bucketed(key):
+    """Many distinct prompt lengths compile at most O(log max_len)
+    prefill programs — lengths bucket to the next power of two."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    lens = list(range(3, 19))                      # 16 distinct lengths
+    reqs = [{"tokens": np.asarray(
+        jax.random.randint(jax.random.fold_in(key, i), (T,),
+                           0, cfg.vocab_size), np.int32)}
+            for i, T in enumerate(lens)]
+    out, eng = _run(cfg, params, reqs, paged=False, gen=2)
+    assert len(out) == len(lens)
+    # buckets touched: 8, 16, 32 — never one program per length
+    assert len(eng._prefills) <= 3
+
+
+# ------------------------------------------------------------------
+# utilization stats (satellite 2)
+# ------------------------------------------------------------------
+
+def test_throughput_reports_honest_utilization(key):
+    """One long and one short request on two slots: the short slot goes
+    idle, so utilization < 1 and the waste is positive and consistent."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = _params(cfg, key)
+    eng = Engine(cfg, params, num_slots=2, max_len=MAX_LEN, decode_chunk=4)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=16)
+    eng.submit(np.arange(5, dtype=np.int32) + 5, max_new_tokens=2)
+    eng.run()
+    tp = eng.throughput()
+    s = eng.stats
+    capacity = s["decode_steps"] * 2
+    assert 0.0 < tp["slot_utilization"] < 1.0
+    assert tp["wasted_decode_tokens"] == capacity - s["decode_tokens"]
+    assert tp["slot_utilization"] == round(s["decode_tokens"] / capacity, 4)
