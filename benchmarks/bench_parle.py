@@ -16,6 +16,12 @@ Fields:
     donated-buffer compiled program per L steps, batches staged by one
     jitted dispatch, double-buffered.  ``round_speedup`` =
     steps_per_s / step_loop_steps_per_s (acceptance: >= 1.5x).
+  * ``obs_round_us`` / ``obs_overhead_ratio`` — the SAME fused round
+    driven with full telemetry (round span ending on
+    ``block_until_ready``, counters, round-latency histogram — what
+    ``launch/train.py --metrics-out --trace-out`` adds per round),
+    interleaved with the bare trials so noise hits both alike.
+    Acceptance: ratio <= 1.02.
   * ``compile_s`` — AOT compile seconds per program.
   * per-axis collective bytes of the composed-mesh compiled step and
     ``sync_compress_bytes`` — the replica-axis sync payload at
@@ -140,18 +146,54 @@ def measure_steps() -> dict:
         jax.block_until_ready(m)
         return rs, nxt, (time.perf_counter() - t0) / (k * L) * 1e6
 
+    # --- the same fused round under full telemetry, exactly as
+    # launch/train.py --metrics-out --trace-out drives it: a round span
+    # ending on block_until_ready (staging inside the span, before the
+    # block, so double-buffering survives), counters, round histogram
+    from repro.obs.metrics import Registry
+    from repro.obs.trace import Tracer
+    reg, tracer = Registry(), Tracer(enabled=True, collect=True)
+    tok_per_round = L * PIN["batch"] * PIN["seq"] * n
+
+    def round_trial_obs(rs, k, start_round):
+        nxt = stage(start_round * L)
+        jax.block_until_ready(nxt)
+        t0 = time.perf_counter()
+        for r in range(start_round, start_round + k):
+            cur, nxt = nxt, None
+            with tracer.span("round", cat="train", round=r) as sp:
+                rs, m = round_c(rs, cur)
+                nxt = stage((r + 1) * L)
+                sp.block(m)
+            reg.counter("train.steps").inc(L)
+            reg.counter("train.rounds").inc()
+            reg.counter("train.tokens").inc(tok_per_round)
+            reg.histogram("train.round_ms").observe(sp.dur_s * 1e3)
+        jax.block_until_ready(m)
+        return rs, nxt, (time.perf_counter() - t0) / (k * L) * 1e6
+
     # warmup both paths (jit trace + sync-cond branch + donation chain)
     s, _ = loop_trial(state, 2 * L, 0)
     rs = dealias_state(state)
     rs, nxt, _ = round_trial(rs, 2, 0)
     # interleave trials so machine-load noise hits both paths equally;
     # per-path MIN is the least-noise throughput estimate
-    loop_us, round_us = [], []
+    loop_us, round_us, obs_us = [], [], []
     for trial in range(3):
         s, us = loop_trial(s, 8 * L, (2 + trial * 8) * L)
         loop_us.append(us)
         rs, nxt, us = round_trial(rs, 8, 2 + (trial + 1) * 8)
         round_us.append(us)
+        rs, nxt, us = round_trial_obs(rs, 8, 2 + (trial + 1) * 8)
+        obs_us.append(us)
+    # extra bare/obs pairs: the overhead ratio compares two nearly-equal
+    # times, so it needs more min-samples than the 3.1x speedup does
+    bare_us = list(round_us)
+    for trial in range(3, 6):
+        rs, nxt, us = round_trial(rs, 8, 2 + (trial + 1) * 8)
+        bare_us.append(us)
+        rs, nxt, us = round_trial_obs(rs, 8, 2 + (trial + 1) * 8)
+        obs_us.append(us)
     out["step_loop_us"] = round(min(loop_us), 1)
     out["step_loop_us_trials"] = [round(u, 1) for u in loop_us]
     out["step_loop_steps_per_s"] = round(1e6 / min(loop_us), 2)
@@ -160,6 +202,9 @@ def measure_steps() -> dict:
     out["steps_per_s"] = round(1e6 / min(round_us), 2)
     out["round_speedup"] = round(out["steps_per_s"]
                                  / out["step_loop_steps_per_s"], 2)
+    out["obs_round_us"] = round(min(obs_us) * L, 1)
+    out["obs_round_us_trials"] = [round(u * L, 1) for u in obs_us]
+    out["obs_overhead_ratio"] = round(min(obs_us) / min(bare_us), 4)
     out["compile_s"] = {k: round(v, 2) for k, v in compile_s.items()}
     return out
 
@@ -384,6 +429,7 @@ def main(out_path: str = OUT_PATH):
           f"steps_per_s={rec['steps_per_s']};"
           f"step_loop_steps_per_s={rec['step_loop_steps_per_s']};"
           f"round_speedup={rec['round_speedup']};"
+          f"obs_overhead={rec['obs_overhead_ratio']};"
           f"fused_us={rec['fused_step_us']};"
           f"sync_ar_bytes={rec['sync_all_reduce_bytes_per_device']};"
           f"int8_sync_bytes={rec['sync_compress_bytes']['int8']};"

@@ -45,10 +45,15 @@ def _path_str(p) -> str:
 
 
 def save(path: str, tree: Any, step: int = 0, meta: dict | None = None,
-         algo: str | None = None):
+         algo: str | None = None, metrics: list | None = None):
     """``algo`` stamps the writing algorithm's registry name into the
     sidecar; :func:`restore` validates it (a ParleState must not be
-    silently reinterpreted as, say, an ElasticState)."""
+    silently reinterpreted as, say, an ElasticState).
+
+    ``metrics``: a cumulative counter stamp (the obs registry's
+    ``counter_stamp()`` — steps/rounds/tokens so far) rides in the
+    sidecar so a resumed run's counters continue monotonically instead
+    of restarting at zero; read it back with :func:`saved_metrics`."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = _flatten_with_paths(tree)
     np.savez(path, **flat)
@@ -57,6 +62,8 @@ def save(path: str, tree: Any, step: int = 0, meta: dict | None = None,
         meta["algo"] = algo
     sidecar = {"step": int(step), "keys": sorted(flat.keys()),
                "meta": meta}
+    if metrics:
+        sidecar["metrics"] = metrics
     with open(path + ".json", "w") as f:
         json.dump(sidecar, f, indent=1)
 
@@ -69,6 +76,18 @@ def saved_meta(path: str) -> dict:
             return json.load(f).get("meta", {})
     except FileNotFoundError:       # sidecar-less (foreign) checkpoint
         return {}
+
+
+def saved_metrics(path: str) -> list:
+    """The cumulative counter stamp written by :func:`save` (empty list
+    for pre-stamp or sidecar-less checkpoints)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("metrics", [])
+    except FileNotFoundError:
+        return []
 
 
 def restore(path: str, like: Any, algo: str | None = None) -> Any:

@@ -60,6 +60,15 @@ def build_argparser():
                          "meshes are bit-exact; composed specs (e.g. "
                          "pod:2,data:2) compile per-topology GSPMD "
                          "programs that differ by a few ulps")
+    ap.add_argument("--metrics-out", default="",
+                    help="pod metrics JSONL: each worker writes "
+                         "<path>.worker<i>; the parent merges the "
+                         "per-process registry snapshots into <path> "
+                         "as a pod_merged event")
+    ap.add_argument("--trace-out", default="",
+                    help="pod Chrome trace: workers write "
+                         "<path>.worker<i>; the parent concatenates "
+                         "them into <path> (one pid per process)")
     ap.add_argument("--_worker", type=int, default=-1,
                     help="(internal) worker index; set by the parent")
     return ap
@@ -115,7 +124,14 @@ def run_worker(args) -> list:
     from repro.data.synthetic import TokenStream, replica_batches
     from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
     from repro.models.model import build_model
+    from repro.obs import Obs
     from repro.sharding import partition
+
+    # each worker writes its own telemetry files (the parent passed
+    # per-worker paths); the trace pid is the process index so the
+    # merged pod trace shows one lane per process
+    obs = Obs(args.metrics_out, args.trace_out, pid=proc,
+              process_name=f"pod-worker{proc}")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -150,24 +166,47 @@ def run_worker(args) -> list:
     from jax.sharding import NamedSharding, PartitionSpec as P
     bshard = NamedSharding(mesh, P(raxis))
 
+    mesh_rec = obs.emit("mesh", mesh=dict(mesh.shape), replica_axis=raxis,
+                        processes=jax.process_count(),
+                        devices_per_process=per_proc,
+                        global_devices=jax.device_count())
     if proc == 0:
-        print(json.dumps({
-            "mesh": dict(mesh.shape), "replica_axis": raxis,
-            "processes": jax.process_count(),
-            "devices_per_process": per_proc,
-            "global_devices": jax.device_count()}), flush=True)
+        print(json.dumps(mesh_rec), flush=True)
 
+    import time
     records = []
+    local_replicas = max(n // max(jax.process_count(), 1), 1)
     for i in range(args.steps):
         host_batch = replica_batches(stream, i, args.batch, n)
         batch = jax.tree.map(lambda b: _make_global(b, bshard), host_batch)
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])        # out_specs P() => replicated
+        if i == 0 and obs.enabled:
+            # AOT once so the worker trace separates compile from the
+            # steady-state steps (best-effort: fall back to lazy jit)
+            try:
+                with obs.span("compile:step", cat="compile"):
+                    step_fn = step_fn.lower(state, batch).compile()
+            except Exception as e:          # pragma: no cover
+                obs.emit("note", msg=f"worker AOT failed: {e!r}")
+        t0 = time.perf_counter()
+        with obs.span("step", cat="train", step=i + 1) as sp:
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])    # out_specs P() => replicated
+            sp.set(loss=round(loss, 6))
+        obs.registry.counter("pod.steps").inc()
+        obs.registry.counter("pod.tokens").inc(
+            args.batch * args.seq * local_replicas)
+        if obs.enabled:
+            obs.registry.histogram("pod.step_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
+            obs.registry.gauge("pod.loss").set(round(loss, 6))
         rec = {"step": i + 1, "loss_hex": loss.hex(),
                "loss": round(loss, 6)}
+        obs.emit("pod_step", step=i + 1, loss=rec["loss"], proc=proc,
+                 loss_hex=rec["loss_hex"])
         records.append(rec)
         if proc == 0:
             print(LOSS_TAG + json.dumps(rec), flush=True)
+    obs.finalize()
     return records
 
 
@@ -181,6 +220,40 @@ def _spawn(args, worker_args, env_extra):
 def _losses(output: str) -> list:
     return [json.loads(line[len(LOSS_TAG):])
             for line in output.splitlines() if line.startswith(LOSS_TAG)]
+
+
+def _merge_pod_obs(args):
+    """Coordinator-side aggregation: fold every worker's final registry
+    snapshot into one pod view (merge is associative — any fold order
+    gives the same result) and concatenate the worker traces into one
+    Chrome trace, one pid lane per process."""
+    if args.metrics_out:
+        from repro.obs import EventSink, merge_snapshots, read_events
+        snaps = []
+        for i in range(args.nproc):
+            try:
+                evs = read_events(f"{args.metrics_out}.worker{i}")
+            except FileNotFoundError:
+                continue
+            final = [e for e in evs if e["kind"] == "metrics_snapshot"]
+            if final:
+                snaps.append(final[-1]["snapshot"])
+        sink = EventSink(args.metrics_out)
+        rec = sink.emit("pod_merged", processes=len(snaps),
+                        snapshot=merge_snapshots(*snaps))
+        sink.close()
+        print(json.dumps({"pod_merged": args.metrics_out,
+                          "processes": rec["processes"]}), flush=True)
+    if args.trace_out:
+        events = []
+        for i in range(args.nproc):
+            try:
+                with open(f"{args.trace_out}.worker{i}") as f:
+                    events.extend(json.load(f)["traceEvents"])
+            except FileNotFoundError:
+                continue
+        with open(args.trace_out, "w") as f:
+            json.dump({"traceEvents": events}, f)
 
 
 def main(argv=None):
@@ -200,8 +273,18 @@ def main(argv=None):
 
     print(json.dumps({"launch": "dist_run", "nproc": args.nproc,
                       "mesh": spec}), flush=True)
+
+    def _obs_flags(i):
+        """Per-worker telemetry paths (the reference run gets none)."""
+        flags = []
+        if args.metrics_out:
+            flags += ["--metrics-out", f"{args.metrics_out}.worker{i}"]
+        if args.trace_out:
+            flags += ["--trace-out", f"{args.trace_out}.worker{i}"]
+        return flags
+
     procs = [_spawn(args, base + ["--nproc", str(args.nproc),
-                                  "--_worker", str(i)], {})
+                                  "--_worker", str(i)] + _obs_flags(i), {})
              for i in range(args.nproc)]
     # drain all pipes concurrently: a failed worker can fill its pipe
     # (long traceback) while its peers block in a gloo collective — a
@@ -218,6 +301,7 @@ def main(argv=None):
     if not dist:
         sys.stderr.write("worker 0 produced no loss records\n" + outs[0])
         return 1
+    _merge_pod_obs(args)
     if args.no_compare:
         return 0
 

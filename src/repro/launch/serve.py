@@ -43,6 +43,7 @@ from repro.configs import ParleConfig, get_config, smoke_variant
 from repro.core import registry
 from repro.data.synthetic import TokenStream
 from repro.models.model import build_model, cache_positions
+from repro.obs import Obs
 from repro.serving import (Engine, SamplingParams, make_naive_fns,
                            naive_generate)
 
@@ -79,7 +80,7 @@ def _make_requests(cfg, args, key):
     return out
 
 
-def _naive_serve(cfg, params, requests, args):
+def _naive_serve(cfg, params, requests, args, obs):
     """One request at a time, batch=1 — the engine's oracle.  The first
     timed pass doubles as the warm-up measurement (compile included);
     the second pass, device-synced, is the reported throughput."""
@@ -105,18 +106,18 @@ def _naive_serve(cfg, params, requests, args):
     _, _, cold_s = one_pass()            # warm-up: includes jit compile
     outs, pos, warm_s = one_pass()       # steady state
     gen_total = sum(o.size for o in outs)
-    print(json.dumps({
-        "phase": "naive", "requests": len(requests),
-        "new_tokens": int(gen_total),
-        "compile_s": round(cold_s - warm_s, 2),
-        "wall_s": round(warm_s, 3),
-        "tokens_per_s": round(gen_total / max(warm_s, 1e-9), 1),
-        "cache_positions": pos,
-        "sample": outs[0].reshape(-1)[:8].tolist(),
-    }), flush=True)
+    print(json.dumps(obs.emit(
+        "serve_summary", phase="naive", requests=len(requests),
+        new_tokens=int(gen_total),
+        compile_s=round(cold_s - warm_s, 2),
+        wall_s=round(warm_s, 3),
+        tokens_per_s=round(gen_total / max(warm_s, 1e-9), 1),
+        cache_positions=pos,
+        sample=outs[0].reshape(-1)[:8].tolist(),
+    )), flush=True)
 
 
-def _engine_serve(cfg, params, requests, args):
+def _engine_serve(cfg, params, requests, args, obs):
     engine = Engine(cfg, params, num_slots=args.slots,
                     max_len=max(r["tokens"].shape[-1] for r in requests)
                     + args.gen,
@@ -125,7 +126,8 @@ def _engine_serve(cfg, params, requests, args):
                     seed=args.seed, paged=args.paged,
                     page_size=args.page_size,
                     num_pages=args.num_pages if args.num_pages > 0 else None,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    registry=obs.registry, tracer=obs.tracer)
     for i, r in enumerate(requests):
         engine.submit(r["tokens"], max_new_tokens=args.gen,
                       eos_id=args.eos_id if args.eos_id >= 0 else None,
@@ -146,7 +148,7 @@ def _engine_serve(cfg, params, requests, args):
         rep.update({"paged": True, "page_size": args.page_size,
                     "num_pages": engine.num_pages,
                     "prefill_chunk": engine.prefill_chunk_len})
-    print(json.dumps(rep), flush=True)
+    print(json.dumps(obs.emit("serve_summary", **rep)), flush=True)
 
 
 def main(argv=None):
@@ -191,6 +193,11 @@ def main(argv=None):
                     help="prompt tokens prefilled per engine step "
                          "(paged mode; interleaves with decode)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="",
+                    help="write schema-versioned metrics/event JSONL here")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON (compile / prefill / "
+                         "decode spans) here")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -212,11 +219,13 @@ def main(argv=None):
                       "replicas": pcfg.n_replicas,
                       "restored": bool(args.resume)}), flush=True)
 
+    obs = Obs(args.metrics_out, args.trace_out, process_name="serve")
     requests = _make_requests(cfg, args, key_cond)
     if args.naive:
-        _naive_serve(cfg, params, requests, args)
+        _naive_serve(cfg, params, requests, args, obs)
     else:
-        _engine_serve(cfg, params, requests, args)
+        _engine_serve(cfg, params, requests, args, obs)
+    obs.finalize()
 
 
 if __name__ == "__main__":

@@ -21,12 +21,14 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ParleConfig, get_config, smoke_variant
 from repro.core import registry
 from repro.data.synthetic import TokenStream, replica_batches
 from repro.models.model import build_model
+from repro.obs import Obs
 
 
 def build_argparser():
@@ -93,6 +95,15 @@ def build_argparser():
                     help="checkpoint path to restore (validates that it "
                          "was written by the same --algo)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="",
+                    help="write schema-versioned JSONL events + a final "
+                         "metrics_snapshot (counters / gauges / "
+                         "histograms) to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "run's spans (compile, rounds/steps, sync "
+                         "flush, eval) to this path; spans end on "
+                         "block_until_ready")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -140,6 +151,7 @@ def main(argv=None):
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                          batch_size=args.batch, seed=args.seed)
 
+    obs = Obs(args.metrics_out, args.trace_out, process_name="train")
     state = algo.init(params, pcfg)
     start = 0
     if args.resume:
@@ -148,6 +160,8 @@ def main(argv=None):
             start = ckpt.latest_step(args.resume)
         except FileNotFoundError:       # sidecar-less foreign checkpoint
             start = 0
+        # counters continue monotonically from the checkpoint's stamp
+        obs.registry.restore_counters(ckpt.saved_metrics(args.resume))
     if mesh is not None:
         from repro.sharding import partition, planner
         step_fn = algo.make_sharded_step(model.loss, pcfg, mesh,
@@ -161,9 +175,10 @@ def main(argv=None):
             specs = algo.state_pspecs(raxis, params=params, mesh=mesh,
                                       cfg=pcfg)
             state = jax.device_put(state, partition.shardings(mesh, specs))
-        print(json.dumps({"mesh": dict(mesh.shape), "replica_axis": raxis,
-                          "in_replica_axes": list(inner_axes),
-                          "replicas_per_device": n // mesh.shape[raxis]}))
+        print(json.dumps(obs.emit(
+            "mesh", mesh=dict(mesh.shape), replica_axis=raxis,
+            in_replica_axes=list(inner_axes),
+            replicas_per_device=n // mesh.shape[raxis])))
     else:
         step_fn = jax.jit(algo.make_step(model.loss, pcfg,
                                          use_kernel=args.use_kernel))
@@ -172,31 +187,54 @@ def main(argv=None):
     history = []
     if args.round_fused:
         history, state = _run_rounds(args, algo, pcfg, cfg, model, mesh,
-                                     raxis, stream, state, start, n, t0)
+                                     raxis, stream, state, start, n, t0,
+                                     obs)
     else:
+        if obs.enabled:
+            # AOT so compile is its own span and the timed steps are
+            # steady-state only (the bench timing discipline)
+            step_fn = _aot_with_span(
+                obs, step_fn, "step",
+                (state, replica_batches(stream, start, args.batch, n,
+                                        split=args.split_data)))
+            _record_hlo_bytes(obs, step_fn, mesh, pcfg, scope="step")
         for i in range(start, start + args.steps):
-            batch = replica_batches(stream, i, args.batch, n,
-                                    split=args.split_data)
-            state, metrics = step_fn(state, batch)
+            with obs.tracer.span("step", step=i + 1) as sp:
+                batch = replica_batches(stream, i, args.batch, n,
+                                        split=args.split_data)
+                state, metrics = step_fn(state, batch)
+                sp.block(metrics)
+            obs.registry.counter("train.steps").inc()
+            obs.registry.counter("train.tokens").inc(
+                args.batch * args.seq * n)
+            if (i + 1) % pcfg.L == 0:
+                obs.registry.counter("train.rounds").inc()
+            if obs.enabled:
+                obs.registry.histogram("train.step_ms").observe(
+                    sp.dur_s * 1e3)
             if (i + 1) % args.log_every == 0 or i == start:
-                rec = {"step": i + 1,
-                       "loss": round(float(metrics["loss"]), 4),
-                       "wall_s": round(time.time() - t0, 1)}
-                rec.update({k: round(v, 4)
-                            for k, v in algo.diagnostics(state).items()})
+                rec = _emit_progress(obs, algo, state, metrics,
+                                     step=i + 1, rnd=(i + 1) // pcfg.L,
+                                     t0=t0)
                 print(json.dumps(rec), flush=True)
                 history.append(rec)
             if (args.checkpoint_every and args.checkpoint_dir
                     and (i + 1) % args.checkpoint_every == 0):
-                ckpt.save(f"{args.checkpoint_dir}/step{i+1:06d}.npz", state,
-                          step=i + 1, meta={"arch": cfg.name},
-                          algo=args.algo)
+                path = f"{args.checkpoint_dir}/step{i+1:06d}.npz"
+                ckpt.save(path, state, step=i + 1, meta={"arch": cfg.name},
+                          algo=args.algo,
+                          metrics=obs.registry.counter_stamp())
+                obs.emit("checkpoint", step=i + 1, path=path)
 
     final = algo.deployable(state)
-    loss, _ = jax.jit(model.loss)(final, _eval_batch(stream, cfg))
-    print(json.dumps({"final_eval_loss": round(float(loss), 4),
-                      "algo": args.algo, "arch": cfg.name,
-                      "total_wall_s": round(time.time() - t0, 1)}))
+    with obs.tracer.span("eval") as sp:
+        loss, _ = jax.jit(model.loss)(final, _eval_batch(stream, cfg))
+        sp.block(loss)
+    print(json.dumps(obs.emit(
+        "train_final", final_eval_loss=round(float(loss), 4),
+        algo=args.algo, arch=cfg.name,
+        total_wall_s=round(time.time() - t0, 1))))
+    obs.finalize()
     return history
 
 
@@ -226,22 +264,88 @@ def _validate_replicas(args, pcfg, mesh, raxis):
             f"the mesh")
 
 
+def _emit_progress(obs, algo, state, metrics, step, rnd, t0):
+    """ONE schema for both progress emit sites (per-step and fused-round
+    drivers): kind=train_progress with the same key set — ``round`` is
+    the number of completed Eq. 8 rounds in both.  Per-replica losses
+    (when the step emits them) land as labeled gauges."""
+    diag = {k: round(v, 4) for k, v in algo.diagnostics(state).items()}
+    rec = obs.emit("train_progress", step=step, round=rnd,
+                   loss=round(float(metrics["loss"]), 4),
+                   wall_s=round(time.time() - t0, 1), diag=diag)
+    if obs.enabled:
+        obs.registry.gauge("train.loss").set(rec["loss"])
+        for k, v in diag.items():
+            obs.registry.gauge(f"train.diag.{k}").set(v)
+        per = metrics.get("loss_per_replica", metrics.get("losses"))
+        if per is not None:
+            for j, lv in enumerate(
+                    np.asarray(per).reshape(-1).tolist()):
+                obs.registry.gauge("train.replica_loss",
+                                   replica=j).set(round(lv, 6))
+    return rec
+
+
+def _aot_with_span(obs, jitted, name, lower_args):
+    """AOT-compile a jitted program under a ``compile`` span so compile
+    time is separated from the steady-state spans; falls back to the
+    jit-dispatch path (with a note event) if lowering is unsupported."""
+    try:
+        with obs.tracer.span(f"compile:{name}", cat="compile"):
+            return jitted.lower(*lower_args).compile()
+    except Exception as e:          # pragma: no cover - defensive
+        obs.emit("note", msg=f"AOT compile of {name} failed ({e}); "
+                 "falling back to jit dispatch")
+        return jitted
+
+
+def _record_hlo_bytes(obs, compiled, mesh, pcfg, scope):
+    """Bytes-on-wire accounting of the compiled hot program: per-axis
+    collective bytes (the Eq. 8d sync payload under the active
+    ``--sync-compress`` codec rides the replica axis) as gauges + one
+    ``hlo_sync_bytes`` event.  Best-effort: a non-AOT handle or an HLO
+    parser hiccup must never kill a training run."""
+    if mesh is None or not obs.metrics_path:
+        return
+    try:
+        from repro.launch import hlo_stats
+        stats = hlo_stats.collective_bytes_by_axis(
+            compiled.as_text(), dict(mesh.shape))
+        by_axis = {ax: int(sum(ops.values()))
+                   for ax, ops in stats["by_axis"].items()}
+        codec = getattr(pcfg, "sync_compress", "none") or "none"
+        for ax, b in by_axis.items():
+            obs.registry.gauge("train.collective_bytes", axis=ax,
+                               codec=codec, scope=scope).set(b)
+        obs.emit("hlo_sync_bytes", codec=codec, scope=scope,
+                 bytes_by_axis=by_axis)
+    except Exception as e:
+        obs.emit("note", msg=f"hlo byte accounting skipped: {e}")
+
+
 def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
-                start, n, t0):
+                start, n, t0, obs):
     """The fused-round driver loop: one donated-buffer compiled program
     per L steps, with each round's batches staged on device by a single
     jitted dispatch that is double-buffered against the round's compute
     (Python enqueues round r+1's batches right after dispatching round
-    r, before touching any of round r's results)."""
+    r, before touching any of round r's results).
+
+    Instrumented (``--metrics-out``/``--trace-out``): the program is
+    AOT-compiled under a ``compile`` span, every round is a ``round``
+    span that ends on ``block_until_ready`` (staging of the next round
+    happens INSIDE the span, before the block, so double-buffering is
+    preserved), and the ``--sync-overlap`` flush is a ``sync_flush``
+    span + ``staleness_flush`` event."""
     from repro.core.parle import dealias_state
     from repro.data.synthetic import make_round_batch_fn
 
     L = pcfg.L
     rounds = args.steps // L
     if args.steps % L:
-        print(json.dumps({"note": f"--round-fused runs whole L={L} "
-                          f"rounds; running {rounds * L} of "
-                          f"{args.steps} steps"}), flush=True)
+        print(json.dumps(obs.emit(
+            "note", msg=f"--round-fused runs whole L={L} rounds; "
+            f"running {rounds * L} of {args.steps} steps")), flush=True)
     if start % L:
         raise SystemExit(f"--round-fused resumes only from round "
                          f"boundaries (step {start} % L={L} != 0)")
@@ -254,19 +358,27 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
     log_rounds = max(1, args.log_every // L)
     history = []
     nxt = stage(start)
+    if obs.enabled and rounds:
+        round_fn = _aot_with_span(obs, round_fn, "round", (state, nxt))
+        _record_hlo_bytes(obs, round_fn, mesh, pcfg, scope="round")
     for r in range(rounds):
         cur, nxt = nxt, None
-        state, metrics = round_fn(state, cur)       # async dispatch
-        if r + 1 < rounds:
-            nxt = stage(start + (r + 1) * L)        # prefetch round r+1
         gstep = start + (r + 1) * L
+        with obs.tracer.span("round", round=r + 1, step=gstep) as sp:
+            state, metrics = round_fn(state, cur)   # async dispatch
+            if r + 1 < rounds:
+                nxt = stage(start + (r + 1) * L)    # prefetch round r+1
+            sp.block(metrics)
+        obs.registry.counter("train.steps").inc(L)
+        obs.registry.counter("train.rounds").inc()
+        obs.registry.counter("train.tokens").inc(
+            L * args.batch * args.seq * n)
+        if obs.enabled:
+            obs.registry.histogram("train.round_ms").observe(
+                sp.dur_s * 1e3)
         if (r + 1) % log_rounds == 0 or r == 0:
-            rec = {"step": gstep,
-                   "loss": round(float(metrics["loss"]), 4),
-                   "round": r + 1,
-                   "wall_s": round(time.time() - t0, 1)}
-            rec.update({k: round(v, 4)
-                        for k, v in algo.diagnostics(state).items()})
+            rec = _emit_progress(obs, algo, state, metrics, step=gstep,
+                                 rnd=r + 1, t0=t0)
             print(json.dumps(rec), flush=True)
             history.append(rec)
         # a round advances L steps at once: checkpoint whenever it
@@ -275,8 +387,10 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
         ce = args.checkpoint_every
         if (ce and args.checkpoint_dir
                 and gstep // ce > (gstep - L) // ce):
-            ckpt.save(f"{args.checkpoint_dir}/step{gstep:06d}.npz", state,
-                      step=gstep, meta={"arch": cfg.name}, algo=args.algo)
+            path = f"{args.checkpoint_dir}/step{gstep:06d}.npz"
+            ckpt.save(path, state, step=gstep, meta={"arch": cfg.name},
+                      algo=args.algo, metrics=obs.registry.counter_stamp())
+            obs.emit("checkpoint", step=gstep, path=path)
     # --sync-overlap leaves the last round's consensus in flight: apply
     # it once before eval/deploy.  Checkpoints above are intentionally
     # pre-flush — resumed runs re-enter the overlap loop, which applies
@@ -284,7 +398,12 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
     # double-apply on resume).
     flush = algo.make_round_flush_fn(pcfg)
     if flush is not None:
-        state = flush(state)
+        with obs.tracer.span("sync_flush", cat="sync") as sp:
+            state = flush(state)
+            sp.block(state)
+        obs.registry.counter("train.staleness_flushes").inc()
+        obs.emit("staleness_flush", step=start + rounds * L,
+                 flush_ms=round(sp.dur_s * 1e3, 3))
     return history, state
 
 

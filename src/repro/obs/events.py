@@ -1,0 +1,119 @@
+"""Versioned JSONL event sink — THE structured-record surface of the
+train / serve / dist_run drivers.
+
+Before this module each driver printed its own loose ``json.dumps``
+dicts with drifting key sets (launch/train.py's two progress sites
+disagreed on keys for the same concept).  Every record now goes
+through :meth:`EventSink.emit`, which stamps the common envelope —
+``v`` (schema version), ``kind``, ``ts`` (unix seconds) — validates
+the kind's required fields, and appends one JSON line to the
+``--metrics-out`` file.  Drivers that also print to stdout print the
+*returned* record, so the console line and the file line are the same
+object.
+
+The schema is intentionally open: unknown EXTRA fields are allowed
+(forward compatibility), unknown KINDS and missing/ill-typed required
+fields are not.  :func:`read_events` re-validates on load, so a file
+that round-trips is schema-valid by construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import IO, List, Optional
+
+SCHEMA_VERSION = 1
+
+_NUM = (int, float)
+
+# kind -> {required field: type-or-tuple}.  The envelope (v/kind/ts) is
+# required everywhere.  ``None`` in a tuple marks a nullable field.
+KINDS = {
+    # free-form one-off records (driver config echo, human notes)
+    "run_config": {},
+    "note": {"msg": str},
+    "mesh": {"mesh": dict},
+    # training: ONE schema for both progress emit sites (per-step and
+    # fused-round drivers) — same key set, same types
+    "train_progress": {"step": int, "round": int, "loss": _NUM,
+                       "wall_s": _NUM, "diag": dict},
+    "train_final": {"final_eval_loss": _NUM, "algo": str, "arch": str,
+                    "total_wall_s": _NUM},
+    "staleness_flush": {"step": int},
+    "checkpoint": {"step": int, "path": str},
+    "hlo_sync_bytes": {"codec": str, "bytes_by_axis": dict},
+    # serving
+    "serve_summary": {"phase": str},
+    # multi-process pod launcher
+    "pod_step": {"step": int, "loss": _NUM, "proc": int},
+    "pod_merged": {"processes": int, "snapshot": dict},
+    # registry dump (train/serve final state, or per-worker)
+    "metrics_snapshot": {"snapshot": dict},
+}
+
+
+def validate_event(rec: dict) -> dict:
+    """Validate one record against the schema; returns it unchanged."""
+    if not isinstance(rec, dict):
+        raise ValueError(f"event must be an object, got {type(rec)}")
+    if rec.get("v") != SCHEMA_VERSION:
+        raise ValueError(f"unsupported schema version {rec.get('v')!r} "
+                         f"(expected {SCHEMA_VERSION})")
+    kind = rec.get("kind")
+    if kind not in KINDS:
+        raise ValueError(f"unknown event kind {kind!r}")
+    if not isinstance(rec.get("ts"), _NUM):
+        raise ValueError(f"event {kind!r} missing numeric 'ts'")
+    for field, typ in KINDS[kind].items():
+        if field not in rec:
+            raise ValueError(f"event {kind!r} missing required field "
+                             f"{field!r}")
+        if not isinstance(rec[field], typ):
+            raise ValueError(
+                f"event {kind!r} field {field!r} has type "
+                f"{type(rec[field]).__name__}, expected {typ}")
+        # bool passes isinstance(..., int); reject it for numeric fields
+        if isinstance(rec[field], bool) and typ in (int, _NUM):
+            raise ValueError(f"event {kind!r} field {field!r} is a bool")
+    return rec
+
+
+class EventSink:
+    """Append-only JSONL writer (``path=None``: validate-only, no file)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._f: Optional[IO] = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "w")
+
+    def emit(self, kind: str, **fields) -> dict:
+        rec = {"v": SCHEMA_VERSION, "kind": kind,
+               "ts": round(time.time(), 3), **fields}
+        validate_event(rec)
+        if self._f is not None:
+            self._f.write(json.dumps(rec) + "\n")
+            self._f.flush()
+        return rec
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def read_events(path: str) -> List[dict]:
+    """Load + re-validate a metrics JSONL file."""
+    out = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(validate_event(json.loads(line)))
+            except ValueError as e:
+                raise ValueError(f"{path}:{i + 1}: {e}") from e
+    return out

@@ -56,11 +56,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import build_model
+from repro.obs.metrics import Registry
+from repro.obs.trace import Tracer
 from repro.serving import cache as cache_lib
 from repro.serving import paging
 from repro.serving.request import Request
 from repro.serving.sampling import SamplingParams, make_token_selector
 from repro.serving.scheduler import Scheduler
+
+# per-request latency bucket ladder (ms): sub-ms to minutes, 1-2-5
+_LATENCY_BOUNDS_MS = tuple(m * 10.0 ** e for e in range(-1, 6)
+                           for m in (1.0, 2.0, 5.0))
 
 # families whose prompt KV depends only on the token ids — prefix pages
 # are shareable.  vlm/audio KV depends on per-request conditioning and
@@ -82,7 +88,9 @@ class Engine:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
-                 prefix_share: bool = True, use_paged_kernel: bool = False):
+                 prefix_share: bool = True, use_paged_kernel: bool = False,
+                 registry: Optional[Registry] = None,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.model = build_model(cfg, use_paged_kernel=use_paged_kernel)
         self.params = params
@@ -136,6 +144,13 @@ class Engine:
         self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "chunks": 0, "prefill_chunks": 0}
+        # telemetry: always-on host-side registry (a caller-supplied one
+        # lets serve.py / tests aggregate across engines); the tracer
+        # defaults to disabled — spans cost nothing unless requested
+        self.obs = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self._t_submit = {}          # uid -> perf_counter at submit()
+        self._n_done_obs = 0         # finished-dict prefix already observed
 
     # -- submission ---------------------------------------------------
     def _cond_extra(self, req: Request) -> int:
@@ -161,14 +176,19 @@ class Engine:
                     f"request needs {need} pages but the pool only has "
                     f"{self.pool.alloc.usable} usable pages")
         self._uid += 1
+        self._t_submit[req.uid] = time.perf_counter()
+        self.obs.counter("serve.requests").inc()
         self.sched.submit(req)
         return req.uid
 
     # -- compiled programs --------------------------------------------
-    def _compile(self, fn, args, donate=()):
+    def _compile(self, fn, args, donate=(), name="program"):
         t0 = time.perf_counter()
-        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        with self.tracer.span(f"compile:{name}", cat="compile"):
+            compiled = (jax.jit(fn, donate_argnums=donate)
+                        .lower(*args).compile())
         self.stats["compile_s"] += time.perf_counter() - t0
+        self.obs.counter("serve.compiles").inc()
         return compiled
 
     def _prefill_compiled(self, batch, one_cache):
@@ -184,7 +204,8 @@ class Engine:
 
             self._prefills[sig] = self._compile(
                 prefill_bucketed,
-                (self.params, batch, one_cache, jnp.int32(1)), donate=(2,))
+                (self.params, batch, one_cache, jnp.int32(1)), donate=(2,),
+                name=f"prefill[{batch['tokens'].shape[-1]}]")
         return self._prefills[sig]
 
     def _decode_compiled(self):
@@ -209,7 +230,7 @@ class Engine:
                 self._decode = self._compile(
                     chunk, (self.params, self.cur_tok, self.cache,
                             jnp.zeros((self.num_slots,), bool), self.key),
-                    donate=(2,))
+                    donate=(2,), name="decode_chunk")
             elif self.paged:
                 # hoisted gather: page tables are constant across the
                 # chunk, so gather pool -> dense view once, scan the
@@ -232,7 +253,7 @@ class Engine:
                 self._decode = self._compile(
                     chunk, (self.params, self.cur_tok, self.cache,
                             jnp.zeros((self.num_slots,), bool), self.key),
-                    donate=(2,))
+                    donate=(2,), name="decode_chunk")
             else:
                 def chunk(params, tok, cache, key):
                     def body(carry, k):
@@ -248,7 +269,7 @@ class Engine:
 
                 self._decode = self._compile(
                     chunk, (self.params, self.cur_tok, self.cache, self.key),
-                    donate=(2,))
+                    donate=(2,), name="decode_chunk")
         return self._decode
 
     # -- dense admission ----------------------------------------------
@@ -277,13 +298,17 @@ class Engine:
                 one_cache = self.model.init_cache(self.params, 1, self.max_len)
                 prefill = self._prefill_compiled(batch, one_cache)
                 t0 = time.perf_counter()
-                logits, one_cache = prefill(self.params, batch, one_cache,
-                                            jnp.int32(valid))
-                self.key, k = jax.random.split(self.key)
-                first = self.selector(logits, k)      # (1, 1) | (1, K, 1)
-                first_host = np.asarray(first[0, ..., 0])
+                with self.tracer.span("prefill", cat="prefill",
+                                      uid=req.uid, tokens=req.prompt_len):
+                    logits, one_cache = prefill(self.params, batch, one_cache,
+                                                jnp.int32(valid))
+                    self.key, k = jax.random.split(self.key)
+                    first = self.selector(logits, k)  # (1, 1) | (1, K, 1)
+                    first_host = np.asarray(first[0, ..., 0])
                 self.stats["prefill_s"] += time.perf_counter() - t0
                 self.stats["prefill_tokens"] += req.prompt_len
+                self._observe_first_token(req.uid)
+                self.obs.counter("serve.admitted").inc()
                 total = self._cond_extra(req) + req.prompt_len
                 self.cache = self.writer(self.cache, one_cache,
                                          jnp.int32(slot), jnp.int32(total))
@@ -307,6 +332,8 @@ class Engine:
                 if plan is None:
                     # backpressure: wait for pages; (arrival, uid) order
                     # is restored by the deterministic pop
+                    self.obs.counter("serve.backpressure").inc()
+                    self.obs.counter("serve.requeued").inc()
                     self.sched.requeue(req)
                     return
             else:
@@ -320,6 +347,7 @@ class Engine:
             row = np.zeros((self.max_pages,), np.int32)
             row[:len(plan.pages)] = plan.pages
             self.cache = cache_lib.admit_slot(self.cache, slot, row)
+            self.obs.counter("serve.admitted").inc()
             self.sched.place_prefilling(slot, req, frontier=plan.reuse_len)
 
     def _chunk_batch(self, req: Request, frontier: int):
@@ -353,7 +381,7 @@ class Engine:
                 self.model.prefill_chunk,
                 (self.params, batch, self.cache, jnp.int32(0), jnp.int32(0),
                  jnp.int32(1), jnp.int32(1)),
-                donate=(2,))
+                donate=(2,), name="prefill_chunk")
         return self._prefill_chunk_c
 
     def _prefill_step_paged(self):
@@ -368,16 +396,18 @@ class Engine:
             batch = self._chunk_batch(req, f)
             prog = self._prefill_chunk_compiled(batch)
             t0 = time.perf_counter()
-            logits, self.cache = prog(self.params, batch, self.cache,
-                                      jnp.int32(slot), jnp.int32(f),
-                                      jnp.int32(valid), jnp.int32(total))
-            rec.frontier = f + valid
-            done = rec.frontier >= total
-            if done:
-                lg = logits[:, valid - 1:valid]   # (1,1,V) | (1,1,K,V)
-                self.key, k = jax.random.split(self.key)
-                first = self.selector(lg, k)
-                first_host = np.asarray(first[0, ..., 0])
+            with self.tracer.span("prefill_chunk", cat="prefill",
+                                  uid=req.uid, frontier=f, tokens=valid):
+                logits, self.cache = prog(self.params, batch, self.cache,
+                                          jnp.int32(slot), jnp.int32(f),
+                                          jnp.int32(valid), jnp.int32(total))
+                rec.frontier = f + valid
+                done = rec.frontier >= total
+                if done:
+                    lg = logits[:, valid - 1:valid]  # (1,1,V) | (1,1,K,V)
+                    self.key, k = jax.random.split(self.key)
+                    first = self.selector(lg, k)
+                    first_host = np.asarray(first[0, ..., 0])
             self.stats["prefill_s"] += time.perf_counter() - t0
             self.stats["prefill_tokens"] += valid
             self.stats["prefill_chunks"] += 1
@@ -388,6 +418,7 @@ class Engine:
                     self.pool.finalize_prompt(plan, total)
                 self.cache = cache_lib.set_slot_pos(self.cache, slot, total)
                 self.cur_tok = self.cur_tok.at[slot].set(first[0])
+                self._observe_first_token(req.uid)
                 if self.sched.finish_prefill(slot, first_host):
                     self._release_slot(slot)
 
@@ -395,6 +426,42 @@ class Engine:
         plan = self._slot_plan.pop(slot, None)
         if plan is not None and self.uses_pages:
             self.pool.release(plan)
+
+    # -- per-request latency bookkeeping ------------------------------
+    def _observe_first_token(self, uid: int) -> None:
+        """TTFT: submit() -> the request's first emitted token.  Called
+        right after the blocking first-token transfer, so the wall clock
+        includes queueing, paged backpressure, and (chunked) prefill."""
+        t0 = self._t_submit.get(uid)
+        if t0 is not None:
+            self.obs.histogram("serve.ttft_ms", _LATENCY_BOUNDS_MS).observe(
+                (time.perf_counter() - t0) * 1e3)
+
+    def _note_finished(self) -> None:
+        """Observe completion latency for newly-finished requests.  The
+        scheduler's ``finished`` dict is insertion-ordered, so only the
+        suffix past the already-observed prefix is scanned — O(new)."""
+        done = self.sched.finished
+        if len(done) == self._n_done_obs:
+            return
+        now = time.perf_counter()
+        hist = self.obs.histogram("serve.completion_ms", _LATENCY_BOUNDS_MS)
+        for uid in list(done.keys())[self._n_done_obs:]:
+            t0 = self._t_submit.pop(uid, None)
+            if t0 is not None:
+                hist.observe((now - t0) * 1e3)
+            self.obs.counter("serve.finished").inc()
+        self._n_done_obs = len(done)
+
+    def _observe_pool(self) -> None:
+        if self.paged and self.uses_pages:
+            free = self.pool.alloc.num_free
+            usable = max(self.pool.alloc.usable, 1)
+            self.obs.gauge("serve.pages_free").set(float(free))
+            self.obs.gauge("serve.page_occupancy").set(
+                round(1.0 - free / usable, 4))
+            self.obs.gauge("serve.prefix_hit_rate").set(
+                round(self.pool.prefix_hit_rate(), 4))
 
     # -- the engine loop ----------------------------------------------
     def step(self) -> None:
@@ -410,33 +477,55 @@ class Engine:
             dec = self.sched.decoding_slots()
             if not dec:
                 self.sched.tick()     # arrivals advance while prefilling
+                self._note_finished()
+                self._observe_pool()
                 return
             active = np.zeros((self.num_slots,), bool)
             active[dec] = True
             decode = self._decode_compiled()
             self.key, k = jax.random.split(self.key)
             t0 = time.perf_counter()
-            toks, self.cache = decode(self.params, self.cur_tok, self.cache,
-                                      jnp.asarray(active), k)
+            with self.tracer.span("decode_chunk", cat="decode",
+                                  slots=len(dec), chunk=self.decode_chunk):
+                toks, self.cache = decode(self.params, self.cur_tok,
+                                          self.cache, jnp.asarray(active), k)
+                self.cur_tok = toks[-1]
+                toks_host = np.asarray(toks[..., 0])  # (C, B) | (C, B, K)
         else:
             if not self.sched.active_slots():
                 self.sched.tick()     # idle tick: arrivals advance
+                self._note_finished()
                 return
             decode = self._decode_compiled()
             self.key, k = jax.random.split(self.key)
             t0 = time.perf_counter()
-            toks, self.cache = decode(self.params, self.cur_tok, self.cache, k)
-        self.cur_tok = toks[-1]
-        toks_host = np.asarray(toks[..., 0])  # blocks: (C, B) | (C, B, K)
-        self.stats["decode_s"] += time.perf_counter() - t0
+            with self.tracer.span("decode_chunk", cat="decode",
+                                  slots=len(self.sched.active_slots()),
+                                  chunk=self.decode_chunk):
+                toks, self.cache = decode(self.params, self.cur_tok,
+                                          self.cache, k)
+                self.cur_tok = toks[-1]
+                toks_host = np.asarray(toks[..., 0])  # (C, B) | (C, B, K)
+        dt = time.perf_counter() - t0
+        self.stats["decode_s"] += dt
         self.stats["decode_steps"] += self.decode_chunk
         self.stats["chunks"] += 1
         emitted_before = self.sched.tokens_emitted
         freed = self.sched.absorb_chunk(toks_host)
-        self.stats["decode_tokens"] += self.sched.tokens_emitted - emitted_before
+        emitted = self.sched.tokens_emitted - emitted_before
+        self.stats["decode_tokens"] += emitted
+        # inter-token latency: chunk wall / chunk steps, weighted by the
+        # KEPT token positions this chunk produced (codebooks collapse)
+        K = self.cfg.num_codebooks if self.cfg.family == "audio" else 1
+        kept = int(emitted // K)
+        if kept:
+            self.obs.histogram("serve.itl_ms", _LATENCY_BOUNDS_MS).observe(
+                dt / self.decode_chunk * 1e3, n=kept)
         if self.paged:
             for slot in freed:
                 self._release_slot(slot)
+        self._note_finished()
+        self._observe_pool()
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
         """Drain the queue; returns {uid: emitted tokens (G,) | (K, G)}."""
@@ -458,7 +547,16 @@ class Engine:
         (decode_s pays for the full capacity — idle rows, prefilling
         rows and speculative post-EOS steps are computed either way);
         ``wasted_decode_tokens`` is the capacity that produced nothing.
+
+        Per-request latency (new): ``ttft_ms`` (submit -> first token,
+        includes queueing/backpressure/prefill), ``itl_ms`` (per kept
+        decode token), ``completion_ms`` (submit -> eviction) — each a
+        {count, mean, min, max, p50, p95, p99} histogram summary — plus
+        the admission ``counters``.  The flat aggregate keys above
+        (compile_s, *_tokens_per_s, slot_utilization, ...) are kept
+        unchanged as aliases of the same accounting for one release.
         """
+        self._note_finished()       # requests finished since last step()
         s = self.stats
         K = self.cfg.num_codebooks if self.cfg.family == "audio" else 1
         kept = s["decode_tokens"] / K          # token POSITIONS kept
@@ -472,6 +570,16 @@ class Engine:
             "slot_utilization": round(kept / max(capacity, 1), 4),
             "wasted_decode_tokens": int(capacity - kept),
         }
+        for field, series in (("ttft_ms", "serve.ttft_ms"),
+                              ("itl_ms", "serve.itl_ms"),
+                              ("completion_ms", "serve.completion_ms")):
+            summ = self.obs.histogram(series, _LATENCY_BOUNDS_MS).summary()
+            out[field] = {k: (round(v, 3) if isinstance(v, float) else v)
+                          for k, v in summ.items()}
+        out["counters"] = {
+            name: self.obs.counter(f"serve.{name}").total
+            for name in ("requests", "admitted", "requeued", "backpressure",
+                         "finished")}
         if self.paged:
             out["prefix_hit_rate"] = round(self.pool.prefix_hit_rate(), 4) \
                 if self.uses_pages else 0.0
