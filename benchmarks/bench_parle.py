@@ -415,12 +415,96 @@ def measure_overlap() -> dict:
                              "param_bytes": PIN["param_size"], **probe}}
 
 
+def _dist_pod(extra, metrics_out, timeout=1200):
+    """One launch/dist_run pod in a subprocess; returns the merged
+    registry snapshot from the pod_merged event."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dist_run", "--nproc", "3",
+         "--algo", "parle", "--smoke", "--steps", "9", "--L", "3",
+         "--no-compare", "--metrics-out", metrics_out] + extra,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise RuntimeError(res.stdout + res.stderr)
+    from repro.obs import read_events
+    return [e for e in read_events(metrics_out)
+            if e["kind"] == "pod_merged"][-1]["snapshot"]
+
+
+def _worker_hist(snap, name):
+    """worker label -> {mean_ms, p95_ms, count} for one hist series."""
+    out = {}
+    for h in snap["hists"]:
+        if h["name"] == name:
+            out[int(h["labels"]["worker"])] = {
+                "mean_ms": round(h["sum"] / max(h["count"], 1), 1),
+                "max_ms": round(h["max"], 1), "count": h["count"]}
+    return out
+
+
+def measure_straggler() -> dict:
+    """Straggler-tolerance probe: a 3-process pod (9 steps, L=3) in four
+    configurations — {async, barrier} x {clean, one worker delayed 3x the
+    clean round wall at every round start}.  The metric is the
+    NON-straggler workers' mean ``pod.round_wall_ms``: under the barrier
+    policy every peer absorbs the delay through the round-start
+    collective (ratio ~= 1 + 3), under the async policy the consensus
+    exchange never waits for the straggler (ratio ~= 1).  Per-worker
+    ``pod.sync_wait_ms`` histograms carry the same evidence at the sync
+    point itself."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        def pod(tag, policy, port, straggle_ms=0.0):
+            extra = ["--port", str(port)]
+            if policy == "async":
+                extra += ["--sync-policy", "async"]
+            else:
+                extra += ["--mesh", "pod:3"]
+            if straggle_ms:
+                extra += ["--straggle-ms", str(round(straggle_ms, 1)),
+                          "--straggle-worker", "2"]
+            snap = _dist_pod(extra, os.path.join(td, f"{tag}.jsonl"))
+            return {"round_wall": _worker_hist(snap, "pod.round_wall_ms"),
+                    "sync_wait": _worker_hist(snap, "pod.sync_wait_ms")}
+
+        def clean_mean(r):
+            walls = [w["mean_ms"] for w in r["round_wall"].values()]
+            return sum(walls) / len(walls)
+
+        def nonstraggler_mean(r):
+            walls = [w["mean_ms"] for k, w in r["round_wall"].items()
+                     if k != 2]
+            return sum(walls) / len(walls)
+
+        out = {}
+        for policy, base_port in (("async", 9651), ("barrier", 9661)):
+            clean = pod(f"{policy}_clean", policy, base_port)
+            straggle_ms = 3.0 * clean_mean(clean)
+            slow = pod(f"{policy}_straggled", policy, base_port + 4,
+                       straggle_ms=straggle_ms)
+            out[policy] = {
+                "clean_round_wall_ms": round(clean_mean(clean), 1),
+                "straggle_ms": round(straggle_ms, 1),
+                "nonstraggler_round_wall_ms": round(
+                    nonstraggler_mean(slow), 1),
+                "straggle_ratio": round(
+                    nonstraggler_mean(slow) / clean_mean(clean), 2),
+                "sync_wait_ms": slow["sync_wait"],
+                "round_wall_ms": slow["round_wall"],
+            }
+        return {"straggler": out}
+
+
 def main(out_path: str = OUT_PATH):
     rec = {"pinned_config": PIN}
     rec.update(measure_steps())
     rec.update(measure_comm())
     rec.update(measure_compress())
     rec.update(measure_overlap())
+    rec.update(measure_straggler())
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -437,6 +521,10 @@ def main(out_path: str = OUT_PATH):
           f"{rec['sync_overlap']['none']['exposed_sync_us_saved']};"
           f"overlap_saved_int8_us="
           f"{rec['sync_overlap']['int8']['exposed_sync_us_saved']};"
+          f"async_straggle_ratio="
+          f"{rec['straggler']['async']['straggle_ratio']};"
+          f"barrier_straggle_ratio="
+          f"{rec['straggler']['barrier']['straggle_ratio']};"
           f"out={os.path.relpath(out_path)}")
     return rec
 

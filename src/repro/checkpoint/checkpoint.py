@@ -146,6 +146,18 @@ def restore(path: str, like: Any, algo: str | None = None) -> Any:
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
 
 
+def load_flat(path: str) -> dict:
+    """Template-free load: the raw {path-encoded key: ndarray} mapping
+    as written (bf16 leaves stay uint16 bit patterns).  For consumers
+    whose restore-time structure legitimately differs from the writer's
+    — e.g. an elastic async pod resuming with a different worker count
+    reads the consensus vectors without any ``like`` tree."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    return {k: data[k] for k in data.files}
+
+
 def latest_step(path: str) -> int:
     if not path.endswith(".npz"):
         path = path + ".npz"

@@ -927,6 +927,153 @@ def make_sharded_overlap_round_fn(loss_fn: Callable, cfg, mesh,
     return round_fn
 
 
+# ------------------------------------------------------------------
+# Asynchronous / elastic consensus (the runtime "async" sync policy):
+# each worker runs rounds at its own pace, pushes its (optionally
+# quantized) x+e contribution to a host-side coordinator when ITS round
+# ends, and pulls back a staleness-weighted mean — no barrier.  The
+# pieces here are the math halves; the wire/coordination halves live in
+# repro/runtime/coordinator.py.
+# ------------------------------------------------------------------
+
+def staleness_weighted_mean(means, counts, rounds, decay=0.5):
+    """The async Eq. (8d) reference: a staleness-weighted average of
+    per-worker replica means.
+
+    ``means``: one pytree (or flat list of arrays) per worker, each the
+    mean of that worker's ``counts[a]`` replica contributions.
+    ``rounds``: each worker's completed-round index; a worker that is
+    ``r_max - r_a`` rounds behind the freshest contribution has its
+    weight decayed by ``decay ** (r_max - r_a)``:
+
+        w_a = counts[a] * decay ** (r_max - r_a)
+        xbar = sum_a w_a * mean_a / sum_a w_a
+
+    With every worker at the same round this reduces to the plain
+    count-weighted mean — i.e. the barrier path's global replica mean —
+    and a single worker's consensus is exactly its own mean (returned
+    untouched, so no float round-trip perturbs the n=1 equivalence).
+    Workers joining/leaving need no rebalancing constant: n only ever
+    appears through the membership of ``means`` itself."""
+    if not means:
+        raise ValueError("staleness_weighted_mean of zero contributions")
+    if len(means) == 1:
+        return means[0]
+    r_max = max(rounds)
+    ws = [float(c) * float(decay) ** (r_max - r)
+          for c, r in zip(counts, rounds)]
+    tot = sum(ws)
+
+    def leaf(*vals):
+        acc = ws[0] * vals[0]
+        for w, v in zip(ws[1:], vals[1:]):
+            acc = acc + w * v
+        return (acc / tot).astype(vals[0].dtype)
+
+    return jax.tree.map(leaf, *means)
+
+
+def make_inner_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
+                        use_kernel: bool = False, lr_schedule=None):
+    """The async round's compute half: ONE donated compiled program
+    scanning the L = cfg.L inner steps (8a-8b) with NO sync — the worker
+    then pushes :func:`async_contribution` to the coordinator and applies
+    the consensus it gets back via :func:`make_async_apply_fn`.  Same
+    entry invariants and metric contract as :func:`make_round_fn`;
+    because ``x`` only changes at the consensus apply, the pushed payload
+    is identical whether it is snapshotted before or after the scan."""
+
+    def replica_grad(params, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def round_fn(state: ParleState, batches):
+        def body(s, b):
+            losses, grads = jax.vmap(replica_grad)(s.y, b)
+            if weight_decay:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                     grads, s.y)
+            lr_scale = (lr_schedule(s.step) if lr_schedule is not None
+                        else 1.0)
+            s = inner_step(s, grads, cfg, use_kernel=use_kernel,
+                           lr_scale=lr_scale)
+            return s, jnp.mean(losses)
+
+        state, losses = jax.lax.scan(body, state, batches)
+        metrics = {"loss": jnp.mean(losses), "losses": losses,
+                   "gamma": state.scopes.gamma, "rho": state.scopes.rho,
+                   "step": state.step}
+        return state, metrics
+
+    return jax.jit(round_fn, donate_argnums=(0,))
+
+
+def async_contribution(state: ParleState, cfg):
+    """The async worker's push payload: each LOCAL replica's sync
+    contribution ``c_a = x_a + e_a``, flattened per leaf and quantized
+    per ``cfg.sync_compress`` — the same per-replica compression as the
+    barrier sync, so the coordinator's dequantized mean matches
+    :func:`_sync_stats` semantics (and the wire carries the quantized
+    bytes, not f32).
+
+    Returns ``(payload, e_new)``: ``payload`` is a list in
+    ``tree_flatten(state.x)`` leaf order of ``{"q": (r, M) ndarray,
+    "scales": ndarray | None}`` host arrays (M padded to the codec chunk
+    for bf16/int8, unpadded f32 for "none"); ``e_new`` is the refreshed
+    error-feedback tree (None when compression is off).  The coordinator
+    never needs the model's tree structure — it works on the flat
+    vectors, and the worker reshapes the consensus back via
+    :func:`consensus_from_flat`."""
+    import numpy as np
+    method = _sync_compress(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(state.x)
+    flat_e = (treedef.flatten_up_to(state.e) if state.e is not None
+              else [None] * len(flat))
+    payload, e_news = [], []
+    for xl, el in zip(flat, flat_e):
+        r, shape, m = xl.shape[0], xl.shape, xl[0].size
+        c = xl.astype(jnp.float32).reshape(r, -1)
+        if el is not None:
+            c = c + el.reshape(r, -1)
+        if method == "none":
+            payload.append({"q": np.asarray(c), "scales": None})
+            e_news.append(el)
+            continue
+        cpad = compress.pad_to_chunk(c)
+        q, s, res = compress.quantize_ef(cpad, method)
+        payload.append({"q": np.asarray(q),
+                        "scales": None if s is None else np.asarray(s)})
+        e_news.append(res[:, :m].reshape(shape))
+    e_new = (jax.tree_util.tree_unflatten(treedef, e_news)
+             if state.e is not None else None)
+    return payload, e_new
+
+
+def consensus_from_flat(vectors, like):
+    """Rebuild a model-shaped xbar tree from the coordinator's flat
+    consensus vectors (one per leaf of ``like``'s x, in tree_flatten
+    order; each may carry codec padding past the leaf's true size)."""
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    leaves = [jnp.asarray(v[: l[0].size], jnp.float32).reshape(l.shape[1:])
+              for v, l in zip(vectors, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def make_async_apply_fn(cfg, lr_schedule=None):
+    """jitted ``apply(state, xbar) -> state``: the Eq. (8c)-(8d)
+    consensus update against a coordinator-supplied staleness-weighted
+    mean, at the same outer-lr scale the barrier sync would have used
+    (schedule(step - 1)).  ``e`` passes through — the caller installs
+    the refreshed residual from :func:`async_contribution` first."""
+
+    def apply(state, xbar):
+        lr_scale = (lr_schedule(state.step - 1) if lr_schedule is not None
+                    else 1.0)
+        return consensus_step(state, xbar, cfg, lr_scale=lr_scale)
+
+    return jax.jit(apply, donate_argnums=(0,))
+
+
 def dealias_state(state):
     """Copy every array leaf of a state into a fresh buffer, so the
     state is safe to hand to a DONATING round fn: ``init`` aliases

@@ -155,18 +155,27 @@ def replica_batches(task_or_stream, step: int, batch_size: int, n_replicas: int,
 
 
 def make_round_batch_fn(stream: TokenStream, L: int, batch_size: int,
-                        n_replicas: int, split: bool = False):
+                        n_replicas: int, split: bool = False,
+                        replica_offset: int = 0,
+                        n_total: Optional[int] = None):
     """Staging for fused L-step rounds: ONE jitted dispatch builds all
     L x n batches of a round — (L, n, B, T) leaves, bit-identical to
     stacking :func:`replica_batches` per step IN EITHER SPLIT MODE
     (regression-tested in tests/test_round_fused.py).  The per-step
     dispatch loop pays ~20 un-jitted host ops per step for the same
     work; the round driver double-buffers this call against the round's
-    device compute."""
+    device compute.
+
+    ``replica_offset`` / ``n_total``: an async pod worker owning
+    replicas [offset, offset + n) of a fleet of n_total draws exactly
+    the shard streams a single-process n_total run would hand those
+    replicas (defaults leave the single-process derivation untouched).
+    """
     n = n_replicas
+    cnt = n if n_total is None else n_total
 
     def one(step, a):
-        return _token_batch(step, a, n, stream.seed, batch_size,
+        return _token_batch(step, a, cnt, stream.seed, batch_size,
                             stream.seq_len, stream.vocab_size,
                             stream.num_codebooks, split=split)
 
@@ -174,6 +183,6 @@ def make_round_batch_fn(stream: TokenStream, L: int, batch_size: int,
     def stage(start_step):
         steps = start_step + jnp.arange(L)
         return jax.vmap(lambda s: jax.vmap(lambda a: one(s, a))(
-            jnp.arange(n)))(steps)
+            replica_offset + jnp.arange(n)))(steps)
 
     return stage

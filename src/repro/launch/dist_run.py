@@ -1,22 +1,40 @@
-"""Multi-process pod-axis launcher: run the ``pod`` mesh layout of
-launch/mesh.py across N REAL processes on one machine, and assert that
-the global-mesh sync is equivalent to the single-process run.
+"""Multi-process pod-axis launcher: N REAL worker processes on one
+machine, under either of two runtime sync policies (repro.runtime):
+
+``--sync-policy barrier`` (default) — the ``pod`` mesh layout of
+launch/mesh.py across N processes with ``jax.distributed.initialize``
+(CPU collectives via gloo), asserting that the global-mesh sync is
+equivalent to the single-process run:
 
     PYTHONPATH=src python -m repro.launch.dist_run --nproc 2 \\
         --mesh pod:2 --algo parle --smoke --steps 12 --L 3
 
-The parent spawns N worker processes; each calls
-``jax.distributed.initialize`` (CPU collectives via gloo) so the pod
-axis spans real process boundaries — the same coordination path a
-multi-host TPU slice uses, minus the ICI.  Workers build the SAME
-compiled program as a single-process run of the same mesh spec (same
-global mesh shape, same shard_map, same per-device shard layout), so
-the cross-process gloo all-reduce is the only moving part — and the
-parent then runs the single-process reference and compares the loss
-streams BIT-FOR-BIT (float hex, not allclose).
-
+Workers build the SAME compiled program as a single-process run of the
+same mesh spec (same global mesh shape, same shard_map, same per-device
+shard layout), so the cross-process gloo all-reduce is the only moving
+part — and the parent then runs the single-process reference and
+compares the loss streams BIT-FOR-BIT (float hex, not allclose).
 Composed specs work too: ``--mesh pod:2,data:2`` runs 2 processes x 2
 devices with planner-driven FSDP inside each pod-replica.
+
+``--sync-policy async`` — asynchronous/ELASTIC replica execution: no
+global mesh, no gloo, no barrier.  Each worker owns replicas
+[i*k, (i+1)*k) of the fleet (k = replicas/nproc), runs fused inner-only
+rounds (Eq. 8a-8b) at its own pace, and after ITS round pushes its
+quantized ``x+e`` contribution to the parent's consensus
+``Coordinator`` (repro.runtime.coordinator), pulling back the
+staleness-weighted mean (weights decay with rounds-behind, see
+``core.parle.staleness_weighted_mean``).  A straggler delays nobody:
+the only wait is the exchange RPC, measured per worker as
+``pod.sync_wait_ms``.  Workers may join/leave mid-run (a dead worker is
+an implicit leave) and the consensus rebalances over the survivors;
+``--checkpoint-out``/``--resume`` let a pod stop and resume with a
+DIFFERENT worker count (the checkpoint carries the model-shaped
+consensus, not any per-worker layout):
+
+    PYTHONPATH=src python -m repro.launch.dist_run --nproc 3 \\
+        --sync-policy async --algo parle --smoke --steps 9 --L 3 \\
+        --straggle-ms 300 --straggle-worker 2
 
 All jax imports are deferred: XLA_FLAGS (per-process device count) and
 the distributed runtime must be configured before jax initializes.
@@ -26,8 +44,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 import subprocess
 import sys
+import time
 
 LOSS_TAG = "DISTLOSS "
 
@@ -43,7 +63,8 @@ def build_argparser():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--replicas", type=int, default=0,
-                    help="0 = the mesh replica-axis size")
+                    help="0 = the mesh replica-axis size (barrier) or "
+                         "--nproc (async; must divide by --nproc)")
     ap.add_argument("--L", type=int, default=3)
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--batch", type=int, default=2, help="per-replica batch")
@@ -52,6 +73,34 @@ def build_argparser():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--port", type=int, default=9876,
                     help="coordinator port for jax.distributed")
+    ap.add_argument("--sync-policy", default="barrier",
+                    choices=("barrier", "async"),
+                    help="barrier: bulk-synchronous global-mesh pod "
+                         "(bit-for-bit vs single-process); async: "
+                         "elastic per-worker rounds + staleness-weighted "
+                         "consensus via the host coordinator")
+    ap.add_argument("--sync-compress", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="async contribution codec (the x+e payload "
+                         "each worker pushes; error feedback rides the "
+                         "worker state)")
+    ap.add_argument("--decay", type=float, default=0.5,
+                    help="async staleness decay: a contribution r rounds "
+                         "behind the freshest weighs count * decay**r")
+    ap.add_argument("--coord-port", type=int, default=0,
+                    help="consensus coordinator port (async; default "
+                         "--port + 1)")
+    ap.add_argument("--straggle-ms", type=float, default=0.0,
+                    help="inject this per-round delay into "
+                         "--straggle-worker (straggler-tolerance probe)")
+    ap.add_argument("--straggle-worker", type=int, default=-1)
+    ap.add_argument("--checkpoint-out", default="",
+                    help="async: checkpoint the final consensus (+ "
+                         "per-worker contribution stamps) here")
+    ap.add_argument("--resume", default="",
+                    help="async: resume the consensus from a "
+                         "--checkpoint-out file; the worker count may "
+                         "differ from the writing pod's")
     ap.add_argument("--no-compare", action="store_true",
                     help="skip the single-process reference run")
     ap.add_argument("--tol", type=float, default=0.0,
@@ -96,10 +145,22 @@ def _make_global(x, sharding):
     return jax.make_array_from_single_device_arrays(x.shape, sharding, arrs)
 
 
+def _maybe_fail_for_test(worker: int):
+    """Orphan-handling test hook: REPRO_TEST_FAIL_WORKER=<i> makes
+    worker i die with rc 41 right after joining the collective group —
+    its peers then hang in their first collective, which is exactly the
+    wedge the parent's process-group kill must break."""
+    if os.environ.get("REPRO_TEST_FAIL_WORKER", "") == str(worker):
+        sys.stderr.write(f"worker {worker}: injected test failure\n")
+        sys.exit(41)
+
+
 def run_worker(args) -> list:
-    """One process of the pod: initialize the distributed runtime (when
-    nproc > 1), build the global mesh, run the sharded step stream, and
-    emit bit-exact losses (proc 0 only)."""
+    """One process of the barrier pod: initialize the distributed
+    runtime (when nproc > 1), build the global mesh, and hand the step
+    stream to the runtime's ``RoundRunner`` (repro/runtime/runner.py —
+    this function no longer contains its own step loop).  Emits
+    bit-exact losses (proc 0 only)."""
     need = _mesh_size(_mesh_spec(args))
     if need % args.nproc != 0:
         raise SystemExit(f"mesh {_mesh_spec(args)!r} ({need} devices) not "
@@ -118,6 +179,10 @@ def run_worker(args) -> list:
             coordinator_address=f"127.0.0.1:{args.port}",
             num_processes=args.nproc, process_id=args._worker)
     proc = jax.process_index()
+    _maybe_fail_for_test(args._worker)
+
+    import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs import ParleConfig, get_config, smoke_variant
     from repro.core import registry
@@ -125,6 +190,7 @@ def run_worker(args) -> list:
     from repro.launch.mesh import make_mesh_from_spec, replica_axis_of
     from repro.models.model import build_model
     from repro.obs import Obs
+    from repro.runtime import RoundRunner
     from repro.sharding import partition
 
     # each worker writes its own telemetry files (the parent passed
@@ -173,48 +239,215 @@ def run_worker(args) -> list:
     if proc == 0:
         print(json.dumps(mesh_rec), flush=True)
 
-    import time
     records = []
     local_replicas = max(n // max(jax.process_count(), 1), 1)
-    for i in range(args.steps):
+
+    def batch_fn(i):
         host_batch = replica_batches(stream, i, args.batch, n)
-        batch = jax.tree.map(lambda b: _make_global(b, bshard), host_batch)
-        if i == 0 and obs.enabled:
-            # AOT once so the worker trace separates compile from the
-            # steady-state steps (best-effort: fall back to lazy jit)
-            try:
-                with obs.span("compile:step", cat="compile"):
-                    step_fn = step_fn.lower(state, batch).compile()
-            except Exception as e:          # pragma: no cover
-                obs.emit("note", msg=f"worker AOT failed: {e!r}")
-        t0 = time.perf_counter()
-        with obs.span("step", cat="train", step=i + 1) as sp:
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])    # out_specs P() => replicated
-            sp.set(loss=round(loss, 6))
-        obs.registry.counter("pod.steps").inc()
-        obs.registry.counter("pod.tokens").inc(
-            args.batch * args.seq * local_replicas)
-        if obs.enabled:
-            obs.registry.histogram("pod.step_ms").observe(
-                (time.perf_counter() - t0) * 1e3)
-            obs.registry.gauge("pod.loss").set(round(loss, 6))
+        return jax.tree.map(lambda b: _make_global(b, bshard), host_batch)
+
+    # barrier-wait probe: a SEPARATE tiny all-reduce program over a
+    # pod-sharded vector, timed at every round start.  Every process
+    # dispatches it at the same point of the step sequence, so the
+    # measured duration is how long THIS worker waits for the slowest
+    # peer to arrive — per-worker sync_wait evidence without touching
+    # the training program (the loss stream stays bit-for-bit).
+    probe = None
+    if args.nproc > 1 and obs.enabled:
+        probe_arr = _make_global(np.ones(mesh.shape[raxis], np.float32),
+                                 NamedSharding(mesh, P(raxis)))
+        psum = jax.jit(lambda x: jnp.sum(x))
+        jax.block_until_ready(psum(probe_arr))     # compile (symmetric)
+        probe = lambda: jax.block_until_ready(psum(probe_arr))
+
+    round_t = {"t": None}
+
+    def pre_step(i):
+        if i % args.L:
+            return
+        # round boundary: injected straggle, then the sync-wait probe
+        if args.straggle_ms > 0 and proc == args.straggle_worker:
+            time.sleep(args.straggle_ms / 1e3)
+        if probe is not None:
+            t = time.perf_counter()
+            probe()
+            obs.registry.histogram("pod.sync_wait_ms", worker=proc) \
+               .observe((time.perf_counter() - t) * 1e3)
+        now = time.perf_counter()
+        if round_t["t"] is not None and obs.enabled:
+            obs.registry.histogram("pod.round_wall_ms", worker=proc) \
+               .observe((now - round_t["t"]) * 1e3)
+        round_t["t"] = now
+
+    def on_step(i, metrics, sp):
+        loss = float(metrics["loss"])    # out_specs P() => replicated
+        sp.set(loss=round(loss, 6))
         rec = {"step": i + 1, "loss_hex": loss.hex(),
                "loss": round(loss, 6)}
+        if obs.enabled:
+            obs.registry.gauge("pod.loss").set(rec["loss"])
         obs.emit("pod_step", step=i + 1, loss=rec["loss"], proc=proc,
                  loss_hex=rec["loss_hex"])
         records.append(rec)
         if proc == 0:
             print(LOSS_TAG + json.dumps(rec), flush=True)
+
+    runner = RoundRunner(obs, ns="pod")
+    state, _ = runner.run_steps(
+        state, step_fn, batch_fn, start=0, steps=args.steps, L=args.L,
+        tokens_per_step=args.batch * args.seq * local_replicas,
+        mesh=mesh, pcfg=pcfg, span_cat="train",
+        on_step=on_step, pre_step=pre_step)
+    if round_t["t"] is not None and obs.enabled:
+        obs.registry.histogram("pod.round_wall_ms", worker=proc) \
+           .observe((time.perf_counter() - round_t["t"]) * 1e3)
+    obs.finalize()
+    return records
+
+
+def _run_async_worker(args) -> list:
+    """One process of the async/elastic pod: PLAIN process (no
+    jax.distributed — a fixed-size collective world cannot be elastic),
+    owning replicas [offset, offset + local_n) of the fleet via the
+    local vmap path.  Rounds are the inner-only fused program; consensus
+    is the AsyncElasticPolicy exchange after each round."""
+    if args.algo != "parle":
+        raise SystemExit("--sync-policy async implements the Parle Eq. 8 "
+                         f"consensus; --algo {args.algo} has no round "
+                         "contribution to push")
+    proc = args._worker
+    _maybe_fail_for_test(proc)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ParleConfig, get_config, smoke_variant
+    from repro.core import parle, registry
+    from repro.data.synthetic import TokenStream, make_round_batch_fn
+    from repro.models.model import build_model
+    from repro.obs import Obs
+    from repro.runtime import (AsyncElasticPolicy, CoordinatorClient,
+                               RoundRunner, consensus_digest)
+
+    n_total = args.replicas or args.nproc
+    if n_total % args.nproc:
+        raise SystemExit(f"--replicas {n_total} not divisible by --nproc "
+                         f"{args.nproc} (each async worker owns an equal "
+                         "replica block)")
+    local_n = n_total // args.nproc
+    offset = proc * local_n
+
+    obs = Obs(args.metrics_out, args.trace_out, pid=proc,
+              process_name=f"pod-worker{proc}")
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    model = build_model(cfg)
+    algo = registry.get(args.algo)
+    pcfg = algo.canonicalize_cfg(ParleConfig(
+        n_replicas=local_n, L=args.L, lr=args.lr, lr_inner=args.lr,
+        batches_per_epoch=max(args.steps // 4, 1),
+        sync_compress=args.sync_compress))
+
+    coord_port = args.coord_port or args.port + 1
+    client = CoordinatorClient(coord_port, worker=f"worker{proc}",
+                               count=local_n)
+    hello = client.join()
+    base_round = hello["round"]
+
+    key = jax.random.PRNGKey(args.seed)
+    state = algo.init(model.init(key), pcfg)
+    if hello["consensus"] is not None:
+        # join an in-flight/resumed consensus: all replicas start AT it
+        xbar = parle.consensus_from_flat(hello["consensus"], state.x)
+        rep = jax.tree.map(
+            lambda m, x: jnp.broadcast_to(m, x.shape).astype(x.dtype),
+            xbar, state.x)
+        state = state._replace(x=rep, y=rep, z=rep)
+    state = parle.dealias_state(state)  # donated rounds need own buffers
+
+    policy = AsyncElasticPolicy(client, pcfg, obs, worker=proc)
+    round_fn = policy.make_round_fn(algo, model.loss, pcfg)
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         batch_size=args.batch, seed=args.seed)
+    stage = make_round_batch_fn(stream, args.L, args.batch, local_n,
+                                replica_offset=offset, n_total=n_total)
+    rounds = args.steps // args.L
+    start = base_round * args.L
+
+    rec0 = obs.emit("mesh", mesh={"async": args.nproc},
+                    replica_axis="replica", n_total=n_total,
+                    local_replicas=local_n, replica_offset=offset,
+                    base_round=base_round)
+    if proc == 0:
+        print(json.dumps(rec0), flush=True)
+
+    records = []
+    round_t = {"t": time.perf_counter()}
+
+    def pre_round(r):
+        if args.straggle_ms > 0 and proc == args.straggle_worker:
+            time.sleep(args.straggle_ms / 1e3)
+
+    def post_round(state, r, gstep, metrics):
+        return policy.exchange(state, base_round + r, gstep, metrics)
+
+    def on_round(r, gstep, metrics):
+        losses = np.asarray(metrics["losses"]).reshape(-1)
+        for j, lv in enumerate(losses.tolist()):
+            stepno = gstep - args.L + j + 1
+            rec = {"step": stepno, "loss_hex": float(lv).hex(),
+                   "loss": round(float(lv), 6)}
+            obs.emit("pod_step", step=stepno, loss=rec["loss"], proc=proc,
+                     loss_hex=rec["loss_hex"])
+            records.append(rec)
+            if proc == 0:
+                print(LOSS_TAG + json.dumps(rec), flush=True)
+        if obs.enabled:
+            obs.registry.gauge("pod.loss").set(
+                round(float(losses[-1]), 6))
+            now = time.perf_counter()
+            # steady-state only: the first round's wall includes the
+            # AOT compile, which would swamp the ms-scale series
+            if r > 0:
+                obs.registry.histogram("pod.round_wall_ms", worker=proc) \
+                   .observe((now - round_t["t"]) * 1e3)
+            round_t["t"] = now
+        if r == 0 and proc == 0 and policy.last_reply is not None:
+            # continuity markers for the elastic-resume tests: the first
+            # pulled consensus, as a digest and an order-free L2 norm
+            # (identical contributions folded in a different arrival
+            # order can differ in the last ulp, so the norm is the
+            # robust cross-reshape comparison)
+            vecs = policy.last_reply["consensus"]
+            l2 = float(np.sqrt(sum(
+                float(np.sum(np.square(np.asarray(v, np.float64))))
+                for v in vecs)))
+            print(json.dumps({"first_consensus_digest":
+                              consensus_digest(vecs),
+                              "first_consensus_l2": round(l2, 6)}),
+                  flush=True)
+
+    runner = RoundRunner(obs, ns="pod")
+    state, _ = runner.run_rounds(
+        state, round_fn, stage, start=start, rounds=rounds, L=args.L,
+        tokens_per_round=args.L * args.batch * args.seq * local_n,
+        pcfg=pcfg, progress_every=0, progress=None,
+        pre_round=pre_round, post_round=post_round, on_round=on_round)
+    client.leave()
     obs.finalize()
     return records
 
 
 def _spawn(args, worker_args, env_extra):
     env = dict(os.environ, **env_extra)
+    # each worker leads its own process group/session so a wedged pod
+    # can be killed as a unit (workers + any children they forked)
     return subprocess.Popen(
         [sys.executable, "-m", "repro.launch.dist_run"] + worker_args,
-        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, start_new_session=True)
 
 
 def _losses(output: str) -> list:
@@ -222,28 +455,101 @@ def _losses(output: str) -> list:
             for line in output.splitlines() if line.startswith(LOSS_TAG)]
 
 
-def _merge_pod_obs(args):
+def _wait_workers(procs):
+    """Reap the pod, draining all pipes concurrently (a failed worker
+    can fill its pipe with a long traceback while its peers block in a
+    collective — a serial read would deadlock the launcher).
+
+    If any worker exits nonzero while peers are still running, the
+    survivors are wedged (their next collective waits on a corpse
+    forever): kill each survivor's whole process group and report the
+    FAILING worker, not the -9s we inflicted.  Returns
+    (outputs, failed_index_or_None, n_killed)."""
+    from concurrent.futures import ThreadPoolExecutor
+    pool = ThreadPoolExecutor(max_workers=len(procs))
+    futs = [pool.submit(p.communicate) for p in procs]
+    failed, killed = None, 0
+    while True:
+        codes = [p.poll() for p in procs]
+        if failed is None:
+            for i, rc in enumerate(codes):
+                if rc not in (None, 0):
+                    failed = i
+                    break
+        if failed is not None and any(c is None for c in codes):
+            for p in procs:
+                if p.poll() is None:
+                    try:
+                        os.killpg(os.getpgid(p.pid), signal.SIGKILL)
+                    except (ProcessLookupError, PermissionError,
+                            OSError):              # pragma: no cover
+                        p.kill()
+                    killed += 1
+            break
+        if all(c is not None for c in codes):
+            break
+        time.sleep(0.05)
+    outs = [f.result()[0] for f in futs]
+    pool.shutdown()
+    return outs, failed, killed
+
+
+def _fail_pod(procs, outs, failed, killed):
+    """Surface the failing worker's output tail and exit nonzero."""
+    rc = procs[failed].returncode
+    tail = "\n".join(outs[failed].splitlines()[-40:])
+    sys.stderr.write(f"--- worker {failed} exited rc={rc}; killed "
+                     f"{killed} orphaned peer(s) ---\n{tail}\n")
+    return rc if rc else 1
+
+
+def _merge_pod_obs(args, sink=None, extra_counters=None):
     """Coordinator-side aggregation: fold every worker's final registry
     snapshot into one pod view (merge is associative — any fold order
     gives the same result) and concatenate the worker traces into one
-    Chrome trace, one pid lane per process."""
+    Chrome trace, one pid lane per process.
+
+    A worker whose ``<path>.worker<i>`` file is missing (or holds no
+    final snapshot — it crashed mid-run) is logged as a ``note`` event
+    and counted in the ``pod_merged`` event's ``missing_workers`` field
+    instead of silently shrinking the pod view.  ``extra_counters`` (a
+    checkpoint counter stamp) folds resumed totals in so pod counters
+    stay monotonic across elastic resumes.  Returns the merged snapshot
+    (or None without --metrics-out)."""
+    merged = None
     if args.metrics_out:
         from repro.obs import EventSink, merge_snapshots, read_events
-        snaps = []
+        snaps, missing = [], []
         for i in range(args.nproc):
             try:
                 evs = read_events(f"{args.metrics_out}.worker{i}")
             except FileNotFoundError:
+                missing.append(i)
                 continue
             final = [e for e in evs if e["kind"] == "metrics_snapshot"]
             if final:
                 snaps.append(final[-1]["snapshot"])
-        sink = EventSink(args.metrics_out)
+            else:
+                missing.append(i)
+        own_sink = sink is None
+        if own_sink:
+            sink = EventSink(args.metrics_out)
+        for i in missing:
+            sink.emit("note", msg=f"pod merge: no metrics snapshot from "
+                      f"worker {i} ({args.metrics_out}.worker{i})")
+        merged = merge_snapshots(*snaps)
+        if extra_counters:
+            merged = merge_snapshots(
+                merged, {"counters": list(extra_counters), "gauges": [],
+                         "hists": []})
         rec = sink.emit("pod_merged", processes=len(snaps),
-                        snapshot=merge_snapshots(*snaps))
-        sink.close()
+                        missing_workers=len(missing), snapshot=merged)
+        if own_sink:
+            sink.close()
         print(json.dumps({"pod_merged": args.metrics_out,
-                          "processes": rec["processes"]}), flush=True)
+                          "processes": rec["processes"],
+                          "missing_workers": rec["missing_workers"]}),
+              flush=True)
     if args.trace_out:
         events = []
         for i in range(args.nproc):
@@ -251,51 +557,115 @@ def _merge_pod_obs(args):
                 with open(f"{args.trace_out}.worker{i}") as f:
                     events.extend(json.load(f)["traceEvents"])
             except FileNotFoundError:
+                sys.stderr.write(f"pod merge: no trace from worker {i} "
+                                 f"({args.trace_out}.worker{i})\n")
                 continue
         with open(args.trace_out, "w") as f:
             json.dump({"traceEvents": events}, f)
+    return merged
+
+
+def _worker_flags(args, i):
+    """Per-worker flags the reference run must NOT inherit."""
+    flags = ["--straggle-ms", str(args.straggle_ms),
+             "--straggle-worker", str(args.straggle_worker)]
+    if args.metrics_out:
+        flags += ["--metrics-out", f"{args.metrics_out}.worker{i}"]
+    if args.trace_out:
+        flags += ["--trace-out", f"{args.trace_out}.worker{i}"]
+    return flags
+
+
+def _base_args(args):
+    return ["--mesh", _mesh_spec(args), "--algo", args.algo,
+            "--arch", args.arch, "--replicas", str(args.replicas),
+            "--L", str(args.L), "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--lr", str(args.lr), "--seed", str(args.seed),
+            "--port", str(args.port)] + (["--smoke"] if args.smoke else [])
+
+
+def _run_async_pod(args) -> int:
+    """Async-pod parent: host the consensus Coordinator, spawn the
+    elastic workers, merge their telemetry, optionally checkpoint the
+    consensus for an elastic resume."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.obs import EventSink
+    from repro.runtime import Coordinator, load_consensus
+
+    coord_port = args.coord_port or args.port + 1
+    sink = EventSink(args.metrics_out) if args.metrics_out else None
+    consensus, start_round, extra_counters = None, 0, None
+    if args.resume:
+        vectors, rnd, meta = load_consensus(args.resume)
+        consensus, start_round = vectors, rnd
+        extra_counters = ckpt.saved_metrics(args.resume)
+        print(json.dumps({"async_resume": args.resume, "round": rnd,
+                          "consensus_digest": meta.get("digest", "")}),
+              flush=True)
+    coord = Coordinator(coord_port, method=args.sync_compress,
+                        decay=args.decay, sink=sink, consensus=consensus,
+                        start_round=start_round)
+    print(json.dumps({"launch": "dist_run", "mode": "async",
+                      "nproc": args.nproc, "coord_port": coord_port,
+                      "replicas": args.replicas or args.nproc,
+                      "rounds": args.steps // args.L}), flush=True)
+
+    base = _base_args(args) + [
+        "--sync-policy", "async", "--sync-compress", args.sync_compress,
+        "--decay", str(args.decay), "--coord-port", str(coord_port)]
+    procs = [_spawn(args, base + ["--nproc", str(args.nproc),
+                                  "--_worker", str(i)]
+                    + _worker_flags(args, i), {})
+             for i in range(args.nproc)]
+    outs, failed, killed = _wait_workers(procs)
+    try:
+        if failed is not None:
+            return _fail_pod(procs, outs, failed, killed)
+        sys.stdout.write(outs[0])
+        if not _losses(outs[0]):
+            sys.stderr.write("worker 0 produced no loss records\n"
+                             + outs[0])
+            return 1
+        merged = _merge_pod_obs(args, sink=sink,
+                                extra_counters=extra_counters)
+        if args.checkpoint_out:
+            coord.save(args.checkpoint_out,
+                       metrics=(merged or {}).get("counters"))
+            print(json.dumps({"async_checkpoint": args.checkpoint_out,
+                              "round": coord.round,
+                              "consensus_digest": coord.digest()}),
+                  flush=True)
+        return 0
+    finally:
+        coord.close()
+        if sink is not None:
+            sink.close()
 
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
     if args._worker >= 0:
-        run_worker(args)
+        if args.sync_policy == "async":
+            _run_async_worker(args)
+        else:
+            run_worker(args)
         return 0
+    if args.sync_policy == "async":
+        return _run_async_pod(args)
 
     spec = _mesh_spec(args)
-    base = ["--mesh", spec, "--algo", args.algo, "--arch", args.arch,
-            "--replicas", str(args.replicas), "--L", str(args.L),
-            "--steps", str(args.steps), "--batch", str(args.batch),
-            "--seq", str(args.seq), "--lr", str(args.lr),
-            "--seed", str(args.seed), "--port", str(args.port)]
-    if args.smoke:
-        base.append("--smoke")
-
+    base = _base_args(args)
     print(json.dumps({"launch": "dist_run", "nproc": args.nproc,
                       "mesh": spec}), flush=True)
 
-    def _obs_flags(i):
-        """Per-worker telemetry paths (the reference run gets none)."""
-        flags = []
-        if args.metrics_out:
-            flags += ["--metrics-out", f"{args.metrics_out}.worker{i}"]
-        if args.trace_out:
-            flags += ["--trace-out", f"{args.trace_out}.worker{i}"]
-        return flags
-
     procs = [_spawn(args, base + ["--nproc", str(args.nproc),
-                                  "--_worker", str(i)] + _obs_flags(i), {})
+                                  "--_worker", str(i)]
+                    + _worker_flags(args, i), {})
              for i in range(args.nproc)]
-    # drain all pipes concurrently: a failed worker can fill its pipe
-    # (long traceback) while its peers block in a gloo collective — a
-    # serial read would deadlock the launcher instead of reporting it
-    from concurrent.futures import ThreadPoolExecutor
-    with ThreadPoolExecutor(max_workers=args.nproc) as pool:
-        outs = list(pool.map(lambda p: p.communicate()[0], procs))
-    for i, (p, out) in enumerate(zip(procs, outs)):
-        if p.returncode != 0:
-            sys.stderr.write(f"--- worker {i} failed ---\n{out}\n")
-            return p.returncode
+    outs, failed, killed = _wait_workers(procs)
+    if failed is not None:
+        return _fail_pod(procs, outs, failed, killed)
     sys.stdout.write(outs[0])
     dist = _losses(outs[0])
     if not dist:

@@ -3,7 +3,12 @@
  * ``make_algorithm_step`` / ``make_algorithm_sharded_step`` — the ONE
    training-step factory: any registered algorithm (parle, entropy_sgd,
    elastic_sgd, sgd) by name, via ``repro.core.registry``.  No
-   per-algorithm branching lives here — the registry object carries it.
+   per-algorithm branching lives here — the registry object carries it,
+   and the program SHAPE (which consensus schedule is compiled in) is
+   delegated to the runtime's :class:`~repro.runtime.SyncPolicy`
+   contract — these factories are thin name-resolving fronts over
+   ``policy.make_step_fn`` / ``make_round_fn`` / ``make_flush_fn``, the
+   same objects launch/train.py and launch/dist_run.py drive.
  * ``make_parle_steps``  — the dry-run DECOMPOSITION of the Parle step
    into inner_step (8a-8b; no cross-replica traffic) and sync_step
    (8c-8d; the single cross-replica all-reduce), compiled as separate
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import parle as parle_mod
 from repro.core import registry
 from repro.models.model import build_model
+from repro.runtime import policy_for
 
 
 def make_loss_fn(cfg, use_flash: bool = False, remat: bool = False):
@@ -32,9 +38,9 @@ def make_algorithm_step(algo_name: str, cfg, pcfg, weight_decay: float = 0.0,
     """step(state, batch) -> (state, metrics) for any registered algo.
     ``batch`` leaves carry a leading replica axis of pcfg.n_replicas."""
     loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
-    return registry.get(algo_name).make_step(
-        loss_fn, pcfg, weight_decay=weight_decay, use_kernel=use_kernel,
-        lr_schedule=lr_schedule)
+    return policy_for(pcfg).make_step_fn(
+        registry.get(algo_name), loss_fn, pcfg, weight_decay=weight_decay,
+        use_kernel=use_kernel, lr_schedule=lr_schedule, jit=False)
 
 
 def make_algorithm_sharded_step(algo_name: str, cfg, pcfg, mesh,
@@ -44,10 +50,10 @@ def make_algorithm_sharded_step(algo_name: str, cfg, pcfg, mesh,
                                 use_kernel: bool = False, lr_schedule=None):
     """The shard_map variant: replica axis sharded over ``replica_axis``."""
     loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
-    return registry.get(algo_name).make_sharded_step(
-        loss_fn, pcfg, mesh, replica_axis=replica_axis,
-        weight_decay=weight_decay, use_kernel=use_kernel,
-        lr_schedule=lr_schedule)
+    return policy_for(pcfg).make_step_fn(
+        registry.get(algo_name), loss_fn, pcfg, mesh=mesh,
+        replica_axis=replica_axis, weight_decay=weight_decay,
+        use_kernel=use_kernel, lr_schedule=lr_schedule)
 
 
 def make_algorithm_round(algo_name: str, cfg, pcfg, mesh=None,
@@ -61,10 +67,10 @@ def make_algorithm_round(algo_name: str, cfg, pcfg, mesh=None,
     re-enters once per round (see the Algorithm protocol docstring for
     the donation and step-counter contracts)."""
     loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat)
-    return registry.get(algo_name).make_round_fn(
-        loss_fn, pcfg, mesh=mesh, replica_axis=replica_axis,
-        weight_decay=weight_decay, use_kernel=use_kernel,
-        lr_schedule=lr_schedule)
+    return policy_for(pcfg).make_round_fn(
+        registry.get(algo_name), loss_fn, pcfg, mesh=mesh,
+        replica_axis=replica_axis, weight_decay=weight_decay,
+        use_kernel=use_kernel, lr_schedule=lr_schedule)
 
 
 def make_algorithm_round_flush(algo_name: str, pcfg, lr_schedule=None):
@@ -74,8 +80,8 @@ def make_algorithm_round_flush(algo_name: str, pcfg, lr_schedule=None):
     (barrier sync, elastic_sgd, sgd).  Call it on the FINAL state before
     eval/deploy — never on a state that will be checkpointed and resumed
     (the resumed overlap loop applies the carry itself)."""
-    return registry.get(algo_name).make_round_flush_fn(
-        pcfg, lr_schedule=lr_schedule)
+    return policy_for(pcfg).make_flush_fn(registry.get(algo_name), pcfg,
+                                          lr_schedule=lr_schedule)
 
 
 def make_parle_steps(cfg, pcfg, weight_decay: float = 0.0,

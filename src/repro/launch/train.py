@@ -21,7 +21,6 @@ import json
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ParleConfig, get_config, smoke_variant
@@ -29,6 +28,8 @@ from repro.core import registry
 from repro.data.synthetic import TokenStream, replica_batches
 from repro.models.model import build_model
 from repro.obs import Obs
+from repro.runtime import (CheckpointSpec, RoundRunner, emit_progress,
+                           resolve_train_policy)
 
 
 def build_argparser():
@@ -70,6 +71,13 @@ def build_argparser():
                          "entropy_sgd): bf16 halves, int8 (per-chunk "
                          "scales + error-feedback residual in the state) "
                          "quarters the wire bytes")
+    ap.add_argument("--sync-policy", default="",
+                    choices=("", "barrier", "overlap", "async"),
+                    help="consensus schedule (repro.runtime): 'barrier' "
+                         "(default; fleet blocks on the Eq. 8d sync), "
+                         "'overlap' (= --sync-overlap, staleness-1), "
+                         "'async' (elastic, multi-process only — run "
+                         "through repro.launch.dist_run)")
     ap.add_argument("--sync-overlap", action="store_true",
                     help="staleness-1 overlapped sync (parle/entropy_sgd "
                          "with --round-fused): issue each round's Eq. 8d "
@@ -115,14 +123,7 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}")
-    if args.sync_overlap and not args.round_fused:
-        raise SystemExit("--sync-overlap requires --round-fused (the "
-                         "overlapped collective is issued at fused-round "
-                         "boundaries; the per-step path always barriers)")
-    if args.sync_overlap and args.algo not in ("parle", "entropy_sgd"):
-        raise SystemExit(f"--sync-overlap is a Parle Eq. 8d feature; "
-                         f"--algo {args.algo} has no round-level sync to "
-                         f"overlap")
+    policy = resolve_train_policy(args)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
@@ -164,9 +165,9 @@ def main(argv=None):
         obs.registry.restore_counters(ckpt.saved_metrics(args.resume))
     if mesh is not None:
         from repro.sharding import partition, planner
-        step_fn = algo.make_sharded_step(model.loss, pcfg, mesh,
-                                         replica_axis=raxis,
-                                         use_kernel=args.use_kernel)
+        step_fn = policy.make_step_fn(algo, model.loss, pcfg, mesh=mesh,
+                                      replica_axis=raxis,
+                                      use_kernel=args.use_kernel)
         inner_axes = planner.in_replica_axes(mesh, raxis)
         if inner_axes:
             # place the state on its planner shardings up front: each
@@ -180,51 +181,30 @@ def main(argv=None):
             in_replica_axes=list(inner_axes),
             replicas_per_device=n // mesh.shape[raxis])))
     else:
-        step_fn = jax.jit(algo.make_step(model.loss, pcfg,
-                                         use_kernel=args.use_kernel))
+        step_fn = policy.make_step_fn(algo, model.loss, pcfg,
+                                      use_kernel=args.use_kernel)
 
     t0 = time.time()
-    history = []
+    runner = RoundRunner(obs, ns="train", checkpoint=CheckpointSpec(
+        dir=args.checkpoint_dir, every=args.checkpoint_every,
+        algo=args.algo, arch=cfg.name))
+
+    def progress(step, rnd, st, metrics):
+        return emit_progress(obs, algo, st, metrics, step, rnd, t0)
+
     if args.round_fused:
-        history, state = _run_rounds(args, algo, pcfg, cfg, model, mesh,
-                                     raxis, stream, state, start, n, t0,
-                                     obs)
+        state, history = _run_rounds(args, algo, policy, pcfg, model,
+                                     mesh, raxis, stream, state, start,
+                                     n, runner, progress)
     else:
-        if obs.enabled:
-            # AOT so compile is its own span and the timed steps are
-            # steady-state only (the bench timing discipline)
-            step_fn = _aot_with_span(
-                obs, step_fn, "step",
-                (state, replica_batches(stream, start, args.batch, n,
-                                        split=args.split_data)))
-            _record_hlo_bytes(obs, step_fn, mesh, pcfg, scope="step")
-        for i in range(start, start + args.steps):
-            with obs.tracer.span("step", step=i + 1) as sp:
-                batch = replica_batches(stream, i, args.batch, n,
-                                        split=args.split_data)
-                state, metrics = step_fn(state, batch)
-                sp.block(metrics)
-            obs.registry.counter("train.steps").inc()
-            obs.registry.counter("train.tokens").inc(
-                args.batch * args.seq * n)
-            if (i + 1) % pcfg.L == 0:
-                obs.registry.counter("train.rounds").inc()
-            if obs.enabled:
-                obs.registry.histogram("train.step_ms").observe(
-                    sp.dur_s * 1e3)
-            if (i + 1) % args.log_every == 0 or i == start:
-                rec = _emit_progress(obs, algo, state, metrics,
-                                     step=i + 1, rnd=(i + 1) // pcfg.L,
-                                     t0=t0)
-                print(json.dumps(rec), flush=True)
-                history.append(rec)
-            if (args.checkpoint_every and args.checkpoint_dir
-                    and (i + 1) % args.checkpoint_every == 0):
-                path = f"{args.checkpoint_dir}/step{i+1:06d}.npz"
-                ckpt.save(path, state, step=i + 1, meta={"arch": cfg.name},
-                          algo=args.algo,
-                          metrics=obs.registry.counter_stamp())
-                obs.emit("checkpoint", step=i + 1, path=path)
+        state, history = runner.run_steps(
+            state, step_fn,
+            lambda i: replica_batches(stream, i, args.batch, n,
+                                      split=args.split_data),
+            start=start, steps=args.steps, L=pcfg.L,
+            tokens_per_step=args.batch * args.seq * n,
+            mesh=mesh, pcfg=pcfg, progress_every=args.log_every,
+            progress=progress)
 
     final = algo.deployable(state)
     with obs.tracer.span("eval") as sp:
@@ -264,82 +244,17 @@ def _validate_replicas(args, pcfg, mesh, raxis):
             f"the mesh")
 
 
-def _emit_progress(obs, algo, state, metrics, step, rnd, t0):
-    """ONE schema for both progress emit sites (per-step and fused-round
-    drivers): kind=train_progress with the same key set — ``round`` is
-    the number of completed Eq. 8 rounds in both.  Per-replica losses
-    (when the step emits them) land as labeled gauges."""
-    diag = {k: round(v, 4) for k, v in algo.diagnostics(state).items()}
-    rec = obs.emit("train_progress", step=step, round=rnd,
-                   loss=round(float(metrics["loss"]), 4),
-                   wall_s=round(time.time() - t0, 1), diag=diag)
-    if obs.enabled:
-        obs.registry.gauge("train.loss").set(rec["loss"])
-        for k, v in diag.items():
-            obs.registry.gauge(f"train.diag.{k}").set(v)
-        per = metrics.get("loss_per_replica", metrics.get("losses"))
-        if per is not None:
-            for j, lv in enumerate(
-                    np.asarray(per).reshape(-1).tolist()):
-                obs.registry.gauge("train.replica_loss",
-                                   replica=j).set(round(lv, 6))
-    return rec
-
-
-def _aot_with_span(obs, jitted, name, lower_args):
-    """AOT-compile a jitted program under a ``compile`` span so compile
-    time is separated from the steady-state spans; falls back to the
-    jit-dispatch path (with a note event) if lowering is unsupported."""
-    try:
-        with obs.tracer.span(f"compile:{name}", cat="compile"):
-            return jitted.lower(*lower_args).compile()
-    except Exception as e:          # pragma: no cover - defensive
-        obs.emit("note", msg=f"AOT compile of {name} failed ({e}); "
-                 "falling back to jit dispatch")
-        return jitted
-
-
-def _record_hlo_bytes(obs, compiled, mesh, pcfg, scope):
-    """Bytes-on-wire accounting of the compiled hot program: per-axis
-    collective bytes (the Eq. 8d sync payload under the active
-    ``--sync-compress`` codec rides the replica axis) as gauges + one
-    ``hlo_sync_bytes`` event.  Best-effort: a non-AOT handle or an HLO
-    parser hiccup must never kill a training run."""
-    if mesh is None or not obs.metrics_path:
-        return
-    try:
-        from repro.launch import hlo_stats
-        stats = hlo_stats.collective_bytes_by_axis(
-            compiled.as_text(), dict(mesh.shape))
-        by_axis = {ax: int(sum(ops.values()))
-                   for ax, ops in stats["by_axis"].items()}
-        codec = getattr(pcfg, "sync_compress", "none") or "none"
-        for ax, b in by_axis.items():
-            obs.registry.gauge("train.collective_bytes", axis=ax,
-                               codec=codec, scope=scope).set(b)
-        obs.emit("hlo_sync_bytes", codec=codec, scope=scope,
-                 bytes_by_axis=by_axis)
-    except Exception as e:
-        obs.emit("note", msg=f"hlo byte accounting skipped: {e}")
-
-
-def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
-                start, n, t0, obs):
-    """The fused-round driver loop: one donated-buffer compiled program
-    per L steps, with each round's batches staged on device by a single
-    jitted dispatch that is double-buffered against the round's compute
-    (Python enqueues round r+1's batches right after dispatching round
-    r, before touching any of round r's results).
-
-    Instrumented (``--metrics-out``/``--trace-out``): the program is
-    AOT-compiled under a ``compile`` span, every round is a ``round``
-    span that ends on ``block_until_ready`` (staging of the next round
-    happens INSIDE the span, before the block, so double-buffering is
-    preserved), and the ``--sync-overlap`` flush is a ``sync_flush``
-    span + ``staleness_flush`` event."""
+def _run_rounds(args, algo, policy, pcfg, model, mesh, raxis, stream,
+                state, start, n, runner, progress):
+    """Fused-round driver setup: build the policy's round program and
+    the jitted batch stager, then hand the loop to the runtime
+    (``RoundRunner.run_rounds`` owns staging/spans/counters/checkpoints
+    — see repro/runtime/runner.py; this function no longer contains a
+    step loop)."""
     from repro.core.parle import dealias_state
     from repro.data.synthetic import make_round_batch_fn
 
+    obs = runner.obs
     L = pcfg.L
     rounds = args.steps // L
     if args.steps % L:
@@ -349,62 +264,18 @@ def _run_rounds(args, algo, pcfg, cfg, model, mesh, raxis, stream, state,
     if start % L:
         raise SystemExit(f"--round-fused resumes only from round "
                          f"boundaries (step {start} % L={L} != 0)")
-    round_fn = algo.make_round_fn(model.loss, pcfg, mesh=mesh,
-                                  replica_axis=raxis or "replica",
-                                  use_kernel=args.use_kernel)
+    round_fn = policy.make_round_fn(algo, model.loss, pcfg, mesh=mesh,
+                                    replica_axis=raxis or "replica",
+                                    use_kernel=args.use_kernel)
     stage = make_round_batch_fn(stream, L, args.batch, n,
                                 split=args.split_data)
     state = dealias_state(state)     # donated rounds need distinct buffers
-    log_rounds = max(1, args.log_every // L)
-    history = []
-    nxt = stage(start)
-    if obs.enabled and rounds:
-        round_fn = _aot_with_span(obs, round_fn, "round", (state, nxt))
-        _record_hlo_bytes(obs, round_fn, mesh, pcfg, scope="round")
-    for r in range(rounds):
-        cur, nxt = nxt, None
-        gstep = start + (r + 1) * L
-        with obs.tracer.span("round", round=r + 1, step=gstep) as sp:
-            state, metrics = round_fn(state, cur)   # async dispatch
-            if r + 1 < rounds:
-                nxt = stage(start + (r + 1) * L)    # prefetch round r+1
-            sp.block(metrics)
-        obs.registry.counter("train.steps").inc(L)
-        obs.registry.counter("train.rounds").inc()
-        obs.registry.counter("train.tokens").inc(
-            L * args.batch * args.seq * n)
-        if obs.enabled:
-            obs.registry.histogram("train.round_ms").observe(
-                sp.dur_s * 1e3)
-        if (r + 1) % log_rounds == 0 or r == 0:
-            rec = _emit_progress(obs, algo, state, metrics, step=gstep,
-                                 rnd=r + 1, t0=t0)
-            print(json.dumps(rec), flush=True)
-            history.append(rec)
-        # a round advances L steps at once: checkpoint whenever it
-        # CROSSES a checkpoint_every boundary, not only on exact
-        # multiples (e.g. --L 3 --checkpoint-every 50 writes at 51)
-        ce = args.checkpoint_every
-        if (ce and args.checkpoint_dir
-                and gstep // ce > (gstep - L) // ce):
-            path = f"{args.checkpoint_dir}/step{gstep:06d}.npz"
-            ckpt.save(path, state, step=gstep, meta={"arch": cfg.name},
-                      algo=args.algo, metrics=obs.registry.counter_stamp())
-            obs.emit("checkpoint", step=gstep, path=path)
-    # --sync-overlap leaves the last round's consensus in flight: apply
-    # it once before eval/deploy.  Checkpoints above are intentionally
-    # pre-flush — resumed runs re-enter the overlap loop, which applies
-    # the carried consensus itself (flushing a checkpointed state would
-    # double-apply on resume).
-    flush = algo.make_round_flush_fn(pcfg)
-    if flush is not None:
-        with obs.tracer.span("sync_flush", cat="sync") as sp:
-            state = flush(state)
-            sp.block(state)
-        obs.registry.counter("train.staleness_flushes").inc()
-        obs.emit("staleness_flush", step=start + rounds * L,
-                 flush_ms=round(sp.dur_s * 1e3, 3))
-    return history, state
+    return runner.run_rounds(
+        state, round_fn, stage, start=start, rounds=rounds, L=L,
+        tokens_per_round=L * args.batch * args.seq * n,
+        mesh=mesh, pcfg=pcfg,
+        progress_every=max(1, args.log_every // L), progress=progress,
+        flush_fn=policy.make_flush_fn(algo, pcfg))
 
 
 def _eval_batch(stream, cfg):

@@ -47,7 +47,11 @@ KINDS = {
     "serve_summary": {"phase": str},
     # multi-process pod launcher
     "pod_step": {"step": int, "loss": _NUM, "proc": int},
-    "pod_merged": {"processes": int, "snapshot": dict},
+    "pod_merged": {"processes": int, "snapshot": dict,
+                   "missing_workers": int},
+    # async/elastic pod membership (coordinator-side)
+    "worker_join": {"worker": str, "n_active": int},
+    "worker_leave": {"worker": str, "n_active": int},
     # registry dump (train/serve final state, or per-worker)
     "metrics_snapshot": {"snapshot": dict},
 }

@@ -1,0 +1,26 @@
+"""Execution runtime: the ONE step/round loop (``RoundRunner``) behind
+the train and dist_run drivers, parameterized by a pluggable
+``SyncPolicy`` (barrier / overlap / async-elastic) with the host-side
+consensus ``Coordinator`` for the async policy."""
+from repro.runtime.coordinator import (  # noqa: F401
+    Coordinator,
+    CoordinatorClient,
+    consensus_digest,
+    load_consensus,
+)
+from repro.runtime.policies import (  # noqa: F401
+    POLICY_NAMES,
+    AsyncElasticPolicy,
+    BarrierPolicy,
+    OverlapPolicy,
+    SyncPolicy,
+    policy_for,
+    resolve_train_policy,
+)
+from repro.runtime.runner import (  # noqa: F401
+    CheckpointSpec,
+    RoundRunner,
+    aot_with_span,
+    emit_progress,
+    record_hlo_bytes,
+)

@@ -1,0 +1,265 @@
+"""Host-side consensus coordinator for the ``async`` sync policy.
+
+One parent-process ``Coordinator`` holds the latest staleness-weighted
+consensus as flat per-leaf f32 vectors (tree_flatten order of the model
+x — structure-agnostic, so workers of any local layout interoperate).
+Each ``dist_run`` worker connects a ``CoordinatorClient`` over a local
+``multiprocessing.connection`` socket and speaks four ops:
+
+* ``join``     — announce itself (+ its local replica count); gets the
+  current consensus (None on a fresh start), the consensus round, and
+  the active-worker count back.  Emits a ``worker_join`` event.
+* ``exchange`` — push the worker's dequantize-ready contribution for
+  ITS just-finished round, pull the refreshed consensus.  No barrier:
+  the reply is computed from whatever the OTHER workers last pushed,
+  weighted down by how many rounds behind they are.
+* ``leave``    — deregister; the worker's contribution leaves the table
+  so the consensus rebalances over the survivors (elastic shrink).
+  Emits ``worker_leave``.  A dead connection (EOF) is an implicit
+  leave — a crashed worker cannot wedge the consensus.
+* ``stop``     — shut the serving loop down.
+
+The consensus math itself — ``staleness_weighted_mean`` with weights
+``w_a = count_a * decay ** (r_max - r_a)`` — lives in
+``repro.core.parle`` next to the rest of the Eq. 8 math; this module is
+only the wire/coordination half.
+
+Elastic checkpointing: :meth:`Coordinator.save` writes the consensus
+vectors + per-worker contribution stamps through the ordinary flat-npz
+checkpoint writer, and :func:`load_consensus` restores them — a pod may
+resume with a DIFFERENT worker count because the checkpoint carries the
+model-shaped consensus, not any per-worker state layout.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from multiprocessing.connection import Client, Listener
+
+import numpy as np
+
+AUTHKEY = b"repro-async-consensus"
+_CHUNK = 1024           # == core.compress.CHUNK (int8 scale granularity)
+
+
+def _np_dequant(q, scales, method: str):
+    """Host-side (numpy) inverse of ``core.compress.quantize``: the
+    coordinator never touches jax, so contributions are decoded with
+    the same chunking arithmetic in plain numpy."""
+    if method == "none":
+        return np.asarray(q, dtype=np.float32)
+    if method == "bf16":
+        # ml_dtypes bfloat16 ndarray (registered by jax's deps); a plain
+        # astype is the exact dequantizer
+        return np.asarray(q).astype(np.float32)
+    if method == "int8":
+        q = np.asarray(q)
+        r, m = q.shape
+        chunked = q.reshape(r, m // _CHUNK, _CHUNK).astype(np.float32)
+        s = np.asarray(scales, dtype=np.float32)[..., None]
+        return (chunked * s).reshape(r, m)
+    raise ValueError(f"unknown sync_compress method {method!r}")
+
+
+def consensus_digest(vectors) -> str:
+    """Stable short digest of a consensus (list of f32 vectors) — the
+    continuity token the elastic-resume tests compare across pod
+    reshapes."""
+    h = hashlib.sha1()
+    for v in vectors:
+        h.update(np.ascontiguousarray(np.asarray(v, np.float32)).tobytes())
+    return h.hexdigest()[:16]
+
+
+class Coordinator:
+    """The host-side consensus table + serving loop.  Thread-per-
+    connection; all table/consensus mutation under one lock (exchanges
+    are tiny next to a round's compute, so serialization here is not a
+    bottleneck and keeps the fold deterministic)."""
+
+    def __init__(self, port: int, method: str = "none", decay: float = 0.5,
+                 sink=None, consensus=None, start_round: int = 0):
+        self.method = method
+        self.decay = decay
+        self.sink = sink
+        self._lock = threading.Lock()
+        # worker -> {"mean": [f32 vec per leaf], "count", "round"}
+        self._table: dict = {}
+        self._active: set = set()
+        self.consensus = consensus      # list of flat f32 vectors | None
+        self.round = start_round
+        self.exchanges = 0
+        self._listener = Listener(("127.0.0.1", port), authkey=AUTHKEY)
+        self._stopping = threading.Event()
+        self._conn_threads: list = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True)
+        self._accept_thread.start()
+
+    # -- serving loop ---------------------------------------------
+    def _accept_loop(self):
+        while not self._stopping.is_set():
+            try:
+                conn = self._listener.accept()
+            except (OSError, EOFError):        # listener closed
+                return
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._conn_threads.append(t)
+
+    def _serve(self, conn):
+        worker = None
+        try:
+            while True:
+                msg = conn.recv()
+                op = msg.get("op")
+                if op == "join":
+                    worker = msg["worker"]
+                    conn.send(self._join(worker, msg.get("count", 1)))
+                elif op == "exchange":
+                    worker = msg["worker"]
+                    conn.send(self._exchange(
+                        worker, msg["payload"], msg["round"],
+                        msg.get("count", 1)))
+                elif op == "leave":
+                    self._leave(worker or msg.get("worker"))
+                    conn.send({"ok": True})
+                    return
+                elif op == "stop":
+                    conn.send({"ok": True})
+                    self._stopping.set()
+                    return
+                else:
+                    conn.send({"error": f"unknown op {op!r}"})
+        except EOFError:
+            # dead worker == implicit leave: its contribution must not
+            # pin the consensus forever
+            if worker is not None and worker in self._active:
+                self._leave(worker)
+        finally:
+            conn.close()
+
+    # -- ops (all under the lock) ---------------------------------
+    def _emit(self, kind, **fields):
+        if self.sink is not None:
+            self.sink.emit(kind, **fields)
+
+    def _join(self, worker, count):
+        with self._lock:
+            self._active.add(worker)
+            self._emit("worker_join", worker=str(worker),
+                       n_active=len(self._active))
+            return {"consensus": self.consensus, "round": self.round,
+                    "n_active": len(self._active)}
+
+    def _leave(self, worker):
+        with self._lock:
+            self._active.discard(worker)
+            self._table.pop(worker, None)
+            self._emit("worker_leave", worker=str(worker),
+                       n_active=len(self._active))
+
+    def _exchange(self, worker, payload, round_idx, count):
+        means = [_np_dequant(leaf["q"], leaf["scales"], self.method)
+                 .mean(axis=0) for leaf in payload]
+        with self._lock:
+            self._active.add(worker)
+            self._table[worker] = {"mean": means, "count": count,
+                                   "round": round_idx}
+            # deterministic fold order: sorted worker names
+            rows = [self._table[w] for w in sorted(self._table)]
+            from repro.core import parle
+            self.consensus = parle.staleness_weighted_mean(
+                [r["mean"] for r in rows], [r["count"] for r in rows],
+                [r["round"] for r in rows], decay=self.decay)
+            self.round = max(r["round"] for r in rows)
+            self.exchanges += 1
+            return {"consensus": self.consensus,
+                    "staleness": self.round - round_idx,
+                    "n_active": len(self._active)}
+
+    # -- checkpointing --------------------------------------------
+    def digest(self) -> str:
+        return consensus_digest(self.consensus or [])
+
+    def save(self, path: str, metrics=None):
+        """Checkpoint the consensus + per-worker contribution stamps.
+        The tree is {"consensus": {leaf index: flat f32 vec}} — layout-
+        free, so ANY worker count can resume from it."""
+        from repro.checkpoint import checkpoint as ckpt
+        with self._lock:
+            if self.consensus is None:
+                raise ValueError("no consensus to checkpoint yet "
+                                 "(no worker has exchanged)")
+            tree = {"consensus": {str(i): np.asarray(v, np.float32)
+                                  for i, v in enumerate(self.consensus)}}
+            stamps = {w: {"round": r["round"], "count": r["count"]}
+                      for w, r in sorted(self._table.items())}
+            ckpt.save(path, tree, step=self.round,
+                      meta={"kind": "async_consensus", "decay": self.decay,
+                            "sync_compress": self.method,
+                            "workers": stamps, "digest": self.digest()},
+                      algo="parle", metrics=metrics)
+
+    def close(self):
+        self._stopping.set()
+        try:
+            self._listener.close()
+        except OSError:                     # pragma: no cover
+            pass
+        for t in self._conn_threads:
+            t.join(timeout=2)
+
+
+def load_consensus(path: str):
+    """Restore a :meth:`Coordinator.save` checkpoint -> (vectors, round,
+    meta).  Template-free (``checkpoint.load_flat``): the whole point of
+    the elastic format is that no worker-count-shaped ``like`` exists at
+    resume time."""
+    from repro.checkpoint import checkpoint as ckpt
+    flat = ckpt.load_flat(path)
+    keys = sorted((k for k in flat if k.startswith("consensus/")),
+                  key=lambda k: int(k.split("/", 1)[1]))
+    vectors = [np.asarray(flat[k], np.float32) for k in keys]
+    return vectors, ckpt.latest_step(path), ckpt.saved_meta(path)
+
+
+class CoordinatorClient:
+    """Worker-side connection.  ``exchange`` measures nothing itself —
+    the caller times the call, which IS the worker's entire
+    synchronization wait under the async policy."""
+
+    def __init__(self, port: int, worker: str, count: int = 1,
+                 retry_s: float = 30.0):
+        import time
+        deadline = time.monotonic() + retry_s
+        while True:
+            try:
+                self.conn = Client(("127.0.0.1", port), authkey=AUTHKEY)
+                break
+            except (ConnectionRefusedError, FileNotFoundError, OSError):
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.1)
+        self.worker = worker
+        self.count = count
+
+    def _rpc(self, msg):
+        self.conn.send(msg)
+        return self.conn.recv()
+
+    def join(self):
+        return self._rpc({"op": "join", "worker": self.worker,
+                          "count": self.count})
+
+    def exchange(self, payload, round_idx: int):
+        return self._rpc({"op": "exchange", "worker": self.worker,
+                          "count": self.count, "round": round_idx,
+                          "payload": payload})
+
+    def leave(self):
+        try:
+            self._rpc({"op": "leave", "worker": self.worker})
+        finally:
+            self.conn.close()

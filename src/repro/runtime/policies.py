@@ -1,0 +1,203 @@
+"""SyncPolicy: HOW replicas reach consensus, as a pluggable contract.
+
+Three implementations of the Eq. 8d consensus schedule:
+
+* ``barrier``  — bulk-synchronous (the historical default): every
+  replica runs L inner steps, then the whole fleet blocks on one
+  all-reduce inside the compiled round/step program.
+* ``overlap``  — staleness-1 (PR 6): round k's collective is issued at
+  round start and applied at the start of round k+1, so it overlaps
+  compute; an end-of-training flush applies the last carry.
+* ``async``    — asynchronous/elastic (this PR): each dist_run worker
+  pushes its quantized x+e contribution to a host-side coordinator when
+  ITS round ends and pulls the latest staleness-weighted consensus with
+  no barrier at all.  Workers may join/leave mid-run; the coordinator
+  rebalances the effective replica count.
+
+Barrier and overlap compile the consensus INTO the round program
+(``algo.make_round_fn`` keys off ``pcfg.sync_overlap``), so those
+policies delegate to the algorithm object untouched — the executed
+program, and therefore the trajectory, is bit-for-bit the pre-refactor
+path.  The async policy keeps the compiled program consensus-free
+(inner steps only) and runs the exchange OUTSIDE the program as a
+``RoundRunner.post_round`` hook.
+"""
+from __future__ import annotations
+
+import time
+
+POLICY_NAMES = ("barrier", "overlap", "async")
+
+
+class SyncPolicy:
+    """Base contract: step/round program factories for one consensus
+    schedule.  All factories delegate to the registered ``Algorithm``
+    object — the policy decides WHICH program shape is built and which
+    out-of-program hooks run, never the math."""
+
+    name = "barrier"
+
+    def make_step_fn(self, algo, loss_fn, pcfg, *, mesh=None,
+                     replica_axis="replica", weight_decay=0.0,
+                     use_kernel=False, lr_schedule=None, jit=True):
+        """The per-step program (one dispatch per step; the consensus —
+        if this step has one — barriers inside it).  ``jit=False``
+        returns the traceable body (launch/steps.py's factory surface —
+        its callers compose their own transforms)."""
+        import jax
+        if mesh is not None:
+            return algo.make_sharded_step(
+                loss_fn, pcfg, mesh, replica_axis=replica_axis,
+                weight_decay=weight_decay, use_kernel=use_kernel,
+                lr_schedule=lr_schedule)
+        fn = algo.make_step(loss_fn, pcfg, weight_decay=weight_decay,
+                            use_kernel=use_kernel, lr_schedule=lr_schedule)
+        return jax.jit(fn) if jit else fn
+
+    def make_round_fn(self, algo, loss_fn, pcfg, *, mesh=None,
+                      replica_axis="replica", weight_decay=0.0,
+                      use_kernel=False, lr_schedule=None):
+        """The fused L-step round program."""
+        return algo.make_round_fn(
+            loss_fn, pcfg, mesh=mesh, replica_axis=replica_axis,
+            weight_decay=weight_decay, use_kernel=use_kernel,
+            lr_schedule=lr_schedule)
+
+    def make_flush_fn(self, algo, pcfg, lr_schedule=None):
+        """End-of-training flush, or None when nothing is in flight."""
+        return algo.make_round_flush_fn(pcfg, lr_schedule=lr_schedule)
+
+
+class BarrierPolicy(SyncPolicy):
+    """Today's default: consensus compiled into the program, fleet-wide
+    block at every sync point."""
+    name = "barrier"
+
+
+class OverlapPolicy(SyncPolicy):
+    """Staleness-1 overlapped consensus (requires ``pcfg.sync_overlap``
+    — the algorithm builds the overlapped round program and a non-None
+    flush from the same flag, so this policy is pure delegation too)."""
+    name = "overlap"
+
+
+class AsyncElasticPolicy(SyncPolicy):
+    """Asynchronous / elastic consensus for dist_run workers.
+
+    The compiled round is ``parle.make_inner_round_fn`` (8a-8b only, no
+    collective).  After each round the worker:
+
+    1. builds its contribution (``parle.async_contribution``: per-leaf
+       replica-mean-ready flat vectors of x+e under the active
+       ``--sync-compress`` codec, refreshing the error-feedback
+       residual),
+    2. exchanges it with the host-side coordinator — the only wait is
+       the RPC round-trip, which is the measured ``pod.sync_wait_ms``,
+    3. applies the staleness-weighted consensus it got back via the
+       jitted Eq. 8c-8d apply (``parle.make_async_apply_fn``).
+
+    ``exchange`` is wired into ``RoundRunner.run_rounds`` as the
+    ``post_round`` hook.
+    """
+
+    name = "async"
+
+    def __init__(self, client, pcfg, obs, worker: int,
+                 lr_schedule=None):
+        self.client = client
+        self.pcfg = pcfg
+        self.obs = obs
+        self.worker = worker
+        self.lr_schedule = lr_schedule
+        self._apply = None
+        self.exchanges = 0
+        self.last_reply = None
+
+    def make_step_fn(self, algo, loss_fn, pcfg, *, mesh=None,
+                     replica_axis="replica", weight_decay=0.0,
+                     use_kernel=False, lr_schedule=None, jit=True):
+        raise SystemExit("--sync-policy async is round-fused only: the "
+                         "consensus exchange happens at round boundaries "
+                         "(there is no per-step program to build)")
+
+    def make_round_fn(self, algo, loss_fn, pcfg, *, mesh=None,
+                      replica_axis="replica", weight_decay=0.0,
+                      use_kernel=False, lr_schedule=None):
+        from repro.core import parle
+        if mesh is not None:
+            raise SystemExit("--sync-policy async runs each worker on its "
+                             "local devices (no global mesh); drop --mesh")
+        return parle.make_inner_round_fn(
+            loss_fn, pcfg, weight_decay=weight_decay,
+            use_kernel=use_kernel, lr_schedule=lr_schedule)
+
+    def make_flush_fn(self, algo, pcfg, lr_schedule=None):
+        return None     # consensus is applied eagerly after every round
+
+    def exchange(self, state, r, gstep, metrics):
+        """RoundRunner ``post_round`` hook: push x+e, pull consensus,
+        apply.  The RPC duration is the whole synchronization cost —
+        recorded per worker so the merged pod snapshot carries the
+        straggler-tolerance evidence."""
+        from repro.core import parle
+        obs = self.obs
+        payload, e_new = parle.async_contribution(state, self.pcfg)
+        t0 = time.perf_counter()
+        reply = self.client.exchange(payload, round_idx=r + 1)
+        wait_ms = (time.perf_counter() - t0) * 1e3
+        self.exchanges += 1
+        self.last_reply = reply
+        if obs.enabled:
+            obs.registry.histogram(
+                "pod.sync_wait_ms", worker=self.worker).observe(wait_ms)
+            obs.registry.gauge("pod.staleness").set(reply["staleness"])
+            obs.registry.gauge("pod.n_active").set(reply["n_active"])
+        if e_new is not None:
+            state = state._replace(e=e_new)
+        if self._apply is None:
+            self._apply = parle.make_async_apply_fn(
+                self.pcfg, lr_schedule=self.lr_schedule)
+        xbar = parle.consensus_from_flat(reply["consensus"], state.x)
+        return self._apply(state, xbar)
+
+
+def policy_for(pcfg=None, name: str = ""):
+    """Resolve a STANDALONE policy (one that needs no coordinator
+    wiring) by explicit name, or from a config's ``sync_overlap`` flag —
+    the selection rule the algorithm objects themselves key off, so a
+    factory caller holding only a pcfg gets the matching policy."""
+    n = name or ("overlap" if getattr(pcfg, "sync_overlap", False)
+                 else "barrier")
+    if n == "barrier":
+        return BarrierPolicy()
+    if n == "overlap":
+        return OverlapPolicy()
+    raise ValueError(f"no standalone sync policy {n!r} (async needs a "
+                     "CoordinatorClient — construct AsyncElasticPolicy "
+                     "directly)")
+
+
+def resolve_train_policy(args):
+    """Map the trainer CLI onto a policy.  ``--sync-policy`` is the
+    first-class spelling; the historical ``--sync-overlap`` flag keeps
+    working (it IS the overlap policy).  Guards are checked in the
+    historical order with the historical messages."""
+    name = args.sync_policy or ("overlap" if args.sync_overlap
+                                else "barrier")
+    if name == "async":
+        raise SystemExit("--sync-policy async is a multi-process pod mode; "
+                         "run it through repro.launch.dist_run (each worker "
+                         "needs its own process + the host-side "
+                         "coordinator)")
+    if name == "overlap":
+        args.sync_overlap = True     # downstream cfg plumbing keys off it
+        if not args.round_fused:
+            raise SystemExit("--sync-overlap requires --round-fused (the "
+                             "overlapped collective is issued at fused-round "
+                             "boundaries; the per-step path always barriers)")
+        if args.algo not in ("parle", "entropy_sgd"):
+            raise SystemExit(f"--sync-overlap is a Parle Eq. 8d feature; "
+                             f"--algo {args.algo} has no round-level sync to "
+                             f"overlap")
+        return OverlapPolicy()
+    return BarrierPolicy()

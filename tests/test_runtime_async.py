@@ -1,0 +1,389 @@
+"""Execution runtime (repro/runtime/): sync-policy contract, async
+consensus math, the host-side coordinator, and the elastic dist_run pod.
+
+Tier-1: pure-math units (staleness weighting, contribution/apply round
+trips, single-worker async == barrier equivalence), the in-process
+coordinator protocol, checkpoint plumbing, and the pod-merge gap
+accounting.  Slow lane: real multi-process pods — the orphan-kill path
+and the 4 -> 2 / 4 -> 6 elastic resume continuity checks.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParleConfig
+from repro.core import parle, registry
+from repro.runtime import (AsyncElasticPolicy, BarrierPolicy, Coordinator,
+                           CoordinatorClient, OverlapPolicy, consensus_digest,
+                           load_consensus, policy_for)
+from repro.runtime.coordinator import _np_dequant
+
+
+def _loss(p, b):
+    return jnp.mean((p["w"] @ p["m"] - b["t"]) ** 2), ()
+
+
+def _params(key):
+    return {"w": jax.random.normal(key, (8, 16)) * 0.1,
+            "m": jax.random.normal(jax.random.fold_in(key, 1), (16, 4)) * 0.1}
+
+
+def _round_batches(key, L, n):
+    return {"t": jax.random.normal(key, (L, n, 8, 4))}
+
+
+def _cfg(n=2, L=3, sync_compress="none"):
+    algo = registry.get("parle")
+    return algo.canonicalize_cfg(ParleConfig(
+        n_replicas=n, L=L, lr=0.05, lr_inner=0.05, batches_per_epoch=5,
+        sync_compress=sync_compress))
+
+
+# ------------------------------------------------------------------
+# staleness-weighted mean (the async Eq. 8d reference)
+# ------------------------------------------------------------------
+
+def test_staleness_single_contribution_is_identity():
+    means = [np.arange(6, dtype=np.float32)]
+    out = parle.staleness_weighted_mean(means, [3], [7])
+    assert out is means[0]          # no float round-trip on n=1
+
+
+def test_staleness_equal_rounds_is_count_weighted_mean():
+    a = [np.ones(4, np.float32) * 2.0]
+    b = [np.ones(4, np.float32) * 8.0]
+    out = parle.staleness_weighted_mean([a, b], [3, 1], [5, 5])
+    np.testing.assert_allclose(out[0], (3 * 2.0 + 1 * 8.0) / 4, rtol=1e-6)
+
+
+def test_staleness_decay_downweights_lagging_worker():
+    fresh = [np.zeros(4, np.float32)]
+    stale = [np.ones(4, np.float32)]
+    out = parle.staleness_weighted_mean([fresh, stale], [1, 1], [10, 8],
+                                        decay=0.5)
+    # w_stale = 0.25 -> consensus = 0.25 / 1.25 = 0.2
+    np.testing.assert_allclose(out[0], 0.2, rtol=1e-6)
+    # decay=1.0: staleness ignored, plain mean
+    out = parle.staleness_weighted_mean([fresh, stale], [1, 1], [10, 8],
+                                        decay=1.0)
+    np.testing.assert_allclose(out[0], 0.5, rtol=1e-6)
+
+
+def test_staleness_zero_contributions_raises():
+    with pytest.raises(ValueError):
+        parle.staleness_weighted_mean([], [], [])
+
+
+# ------------------------------------------------------------------
+# contribution -> dequant -> consensus round trip
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["none", "bf16", "int8"])
+def test_async_contribution_round_trip(method):
+    cfg = _cfg(sync_compress=method)
+    algo = registry.get("parle")
+    state = algo.init(_params(jax.random.PRNGKey(0)), cfg)
+    payload, e_new = parle.async_contribution(state, cfg)
+    flat, _ = jax.tree_util.tree_flatten(state.x)
+    assert len(payload) == len(flat)
+    means = [_np_dequant(p["q"], p["scales"], method).mean(axis=0)
+             for p in payload]
+    xbar = parle.consensus_from_flat(means, state.x)
+    want = jax.tree.map(lambda l: np.asarray(jnp.mean(l, 0)), state.x)
+    got = jax.tree.map(np.asarray, xbar)
+    for k in want:
+        assert got[k].shape == want[k].shape
+        if method == "none":
+            np.testing.assert_array_equal(got[k], want[k])
+        else:
+            np.testing.assert_allclose(got[k], want[k], atol=2e-2)
+    if method == "none":
+        assert e_new is None
+    else:
+        # residual tree mirrors x and carries the quantization error
+        assert jax.tree_util.tree_structure(e_new) \
+            == jax.tree_util.tree_structure(state.x)
+
+
+def test_consensus_from_flat_trims_codec_padding():
+    cfg = _cfg(sync_compress="int8")
+    algo = registry.get("parle")
+    state = algo.init(_params(jax.random.PRNGKey(1)), cfg)
+    payload, _ = parle.async_contribution(state, cfg)
+    flat, _ = jax.tree_util.tree_flatten(state.x)
+    for p, l in zip(payload, flat):
+        assert p["q"].shape[1] >= l[0].size       # padded to codec chunk
+    means = [_np_dequant(p["q"], p["scales"], "int8").mean(axis=0)
+             for p in payload]
+    xbar = parle.consensus_from_flat(means, state.x)
+    for leaf, like in zip(jax.tree_util.tree_leaves(xbar), flat):
+        assert leaf.shape == like.shape[1:]
+
+
+# ------------------------------------------------------------------
+# single-worker async == barrier (the n-of-1 equivalence anchor)
+# ------------------------------------------------------------------
+
+def test_single_worker_async_matches_barrier_bitwise():
+    cfg = _cfg(n=2, L=3)
+    algo = registry.get("parle")
+    params = _params(jax.random.PRNGKey(0))
+    barrier_round = algo.make_round_fn(_loss, cfg)
+    inner_round = parle.make_inner_round_fn(_loss, cfg)
+    apply_fn = parle.make_async_apply_fn(cfg)
+
+    s_bar = parle.dealias_state(algo.init(params, cfg))
+    s_async = parle.dealias_state(algo.init(params, cfg))
+    for r in range(2):
+        rb = _round_batches(jax.random.PRNGKey(20 + r), cfg.L,
+                            cfg.n_replicas)
+        s_bar, m_bar = barrier_round(s_bar, rb)
+        s_async, m_async = inner_round(s_async, rb)
+        # the coordinator path with ONE worker: consensus == own mean
+        payload, e_new = parle.async_contribution(s_async, cfg)
+        means = parle.staleness_weighted_mean(
+            [[_np_dequant(p["q"], p["scales"], "none").mean(axis=0)
+              for p in payload]], [cfg.n_replicas], [r])
+        s_async = apply_fn(s_async,
+                           parle.consensus_from_flat(means, s_async.x))
+        np.testing.assert_allclose(float(m_bar["loss"]),
+                                   float(m_async["loss"]), rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(
+            jax.tree.map(np.asarray, s_bar)),
+            jax.tree_util.tree_leaves(jax.tree.map(np.asarray, s_async))):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------------
+# policy contract
+# ------------------------------------------------------------------
+
+def test_policy_for_resolution():
+    assert isinstance(policy_for(_cfg()), BarrierPolicy)
+    assert isinstance(policy_for(None, "overlap"), OverlapPolicy)
+    import dataclasses
+    ov = dataclasses.replace(_cfg(), sync_overlap=True)
+    assert isinstance(policy_for(ov), OverlapPolicy)
+    with pytest.raises(ValueError):
+        policy_for(None, "async")
+
+
+def test_async_policy_rejects_step_and_mesh_programs():
+    pol = AsyncElasticPolicy(client=None, pcfg=_cfg(), obs=None, worker=0)
+    with pytest.raises(SystemExit):
+        pol.make_step_fn(registry.get("parle"), _loss, _cfg())
+    with pytest.raises(SystemExit):
+        pol.make_round_fn(registry.get("parle"), _loss, _cfg(),
+                          mesh=object())
+    assert pol.make_flush_fn(registry.get("parle"), _cfg()) is None
+
+
+# ------------------------------------------------------------------
+# coordinator protocol (in-process, real sockets)
+# ------------------------------------------------------------------
+
+def _vec_payload(value, size=8):
+    return [{"q": np.full((1, size), value, np.float32), "scales": None}]
+
+
+def test_coordinator_join_exchange_leave_elastic(tmp_path):
+    from repro.obs import EventSink, read_events
+    sink = EventSink(str(tmp_path / "coord.jsonl"))
+    coord = Coordinator(0, method="none", decay=0.5, sink=sink)
+    port = coord._listener.address[1]
+    try:
+        c0 = CoordinatorClient(port, "worker0", count=1)
+        c1 = CoordinatorClient(port, "worker1", count=1)
+        hello = c0.join()
+        assert hello["consensus"] is None and hello["round"] == 0
+        assert c1.join()["n_active"] == 2
+
+        r = c0.exchange(_vec_payload(2.0), round_idx=1)
+        np.testing.assert_allclose(r["consensus"][0], 2.0)
+        assert r["staleness"] == 0
+        r = c1.exchange(_vec_payload(6.0), round_idx=1)
+        np.testing.assert_allclose(r["consensus"][0], 4.0)   # same round
+
+        # worker1 leaves: its contribution leaves the table, consensus
+        # rebalances over the survivor
+        c1.leave()
+        r = c0.exchange(_vec_payload(3.0), round_idx=2)
+        np.testing.assert_allclose(r["consensus"][0], 3.0)
+        assert r["n_active"] == 1
+        c0.leave()
+    finally:
+        coord.close()
+        sink.close()
+    kinds = [e["kind"] for e in read_events(str(tmp_path / "coord.jsonl"))]
+    assert kinds.count("worker_join") == 2
+    assert kinds.count("worker_leave") == 2
+
+
+def test_coordinator_dead_connection_is_implicit_leave():
+    coord = Coordinator(0, method="none")
+    port = coord._listener.address[1]
+    try:
+        c0 = CoordinatorClient(port, "worker0")
+        c1 = CoordinatorClient(port, "worker1")
+        c0.join()
+        c1.join()
+        c1.exchange(_vec_payload(10.0), round_idx=1)
+        c1.conn.close()                   # crash, not a polite leave
+        import time
+        deadline = time.monotonic() + 5
+        while "worker1" in coord._active and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert "worker1" not in coord._active
+        r = c0.exchange(_vec_payload(2.0), round_idx=1)
+        np.testing.assert_allclose(r["consensus"][0], 2.0)
+        c0.leave()
+    finally:
+        coord.close()
+
+
+def test_coordinator_checkpoint_round_trip(tmp_path):
+    path = str(tmp_path / "consensus.npz")
+    coord = Coordinator(0, method="none", decay=0.25)
+    port = coord._listener.address[1]
+    try:
+        with pytest.raises(ValueError):
+            coord.save(path)              # nothing exchanged yet
+        c = CoordinatorClient(port, "worker0", count=2)
+        c.join()
+        c.exchange(_vec_payload(5.0), round_idx=3)
+        coord.save(path, metrics=[{"name": "pod.steps", "labels": {},
+                                   "total": 9}])
+        digest = coord.digest()
+        c.leave()
+    finally:
+        coord.close()
+    vectors, rnd, meta = load_consensus(path)
+    assert rnd == 3
+    assert consensus_digest(vectors) == digest == meta["digest"]
+    assert meta["kind"] == "async_consensus" and meta["decay"] == 0.25
+    assert meta["workers"]["worker0"] == {"round": 3, "count": 2}
+    np.testing.assert_allclose(vectors[0], 5.0)
+    from repro.checkpoint import checkpoint as ckpt
+    assert ckpt.saved_metrics(path)[0]["total"] == 9
+    flat = ckpt.load_flat(path)
+    assert list(flat) == ["consensus/0"]
+
+
+# ------------------------------------------------------------------
+# pod-merge gap accounting (satellite: missing worker files)
+# ------------------------------------------------------------------
+
+def test_merge_pod_obs_counts_missing_workers(tmp_path):
+    from repro.launch.dist_run import _merge_pod_obs, build_argparser
+    from repro.obs import EventSink, Registry, read_events
+    mpath = str(tmp_path / "pod.jsonl")
+    args = build_argparser().parse_args(
+        ["--nproc", "3", "--metrics-out", mpath])
+    # worker 0: full snapshot; worker 1: file exists but crashed before
+    # the final snapshot; worker 2: no file at all
+    reg = Registry()
+    reg.counter("pod.steps").inc(4)
+    s = EventSink(f"{mpath}.worker0")
+    s.emit("metrics_snapshot", snapshot=reg.snapshot())
+    s.close()
+    s = EventSink(f"{mpath}.worker1")
+    s.emit("note", msg="crashed before finalize")
+    s.close()
+    merged = _merge_pod_obs(args)
+    assert merged["counters"][0]["total"] == 4
+    evs = read_events(mpath)
+    assert [e["kind"] for e in evs] == ["note", "note", "pod_merged"]
+    assert evs[-1]["processes"] == 1
+    assert evs[-1]["missing_workers"] == 2
+    assert "worker 1" in evs[0]["msg"] and "worker 2" in evs[1]["msg"]
+
+
+# ------------------------------------------------------------------
+# slow lane: real pods
+# ------------------------------------------------------------------
+
+def _pod_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    return env
+
+
+def _run_pod(extra, env=None, timeout=1200):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dist_run", "--algo", "parle",
+         "--smoke", "--steps", "6", "--L", "3"] + extra,
+        env=env or _pod_env(), capture_output=True, text=True,
+        timeout=timeout)
+
+
+@pytest.mark.slow
+def test_failed_worker_kills_orphaned_peers():
+    env = _pod_env()
+    env["REPRO_TEST_FAIL_WORKER"] = "1"
+    res = _run_pod(["--nproc", "2", "--mesh", "pod:2", "--port", "9411"],
+                   env=env)
+    assert res.returncode == 41, res.stdout + res.stderr
+    assert "worker 1 exited rc=41" in res.stderr
+    assert "killed 1 orphaned peer" in res.stderr
+    assert "injected test failure" in res.stderr   # failing worker's tail
+
+
+@pytest.mark.slow
+def test_async_elastic_resume_grow_and_shrink(tmp_path):
+    """Satellite: checkpoint a 4-worker async pod, resume as 2- and
+    6-worker pods; consensus continuity (digest) + monotonic counters."""
+    ck = str(tmp_path / "async_ck.npz")
+
+    def pod(nproc, port, tag, resume=False):
+        mpath = str(tmp_path / f"pod_{tag}.jsonl")
+        extra = ["--nproc", str(nproc), "--sync-policy", "async",
+                 "--replicas", "12", "--port", str(port),
+                 "--metrics-out", mpath]
+        extra += (["--resume", ck] if resume else ["--checkpoint-out", ck])
+        res = _run_pod(extra)
+        assert res.returncode == 0, res.stdout + res.stderr
+        out = {}
+        for line in res.stdout.splitlines():
+            if line.startswith("{"):
+                out.update(json.loads(line))
+        from repro.obs import read_events
+        merged = [e for e in read_events(mpath)
+                  if e["kind"] == "pod_merged"][-1]
+        out["counters"] = {c["name"]: c["total"]
+                           for c in merged["snapshot"]["counters"]}
+        assert merged["missing_workers"] == 0
+        return out
+
+    a = pod(4, 9421, "a")
+    assert a["counters"]["pod.steps"] == 4 * 6
+    assert a["async_checkpoint"] == ck and a["round"] == 2
+    digest = a["consensus_digest"]
+    vectors, rnd, meta = load_consensus(ck)
+    assert rnd == 2 and consensus_digest(vectors) == digest
+    ck_l2 = float(np.sqrt(sum(
+        float(np.sum(np.square(np.asarray(v, np.float64))))
+        for v in vectors)))
+
+    for nproc, port, tag in ((2, 9431, "b"), (6, 9441, "c")):
+        r = pod(nproc, port, tag, resume=True)
+        # continuity: the resumed pod starts FROM the checkpointed
+        # consensus — every replica is initialized at it and x only
+        # moves at consensus applies, so the first exchanged consensus
+        # IS the checkpoint's (up to arrival-order fold rounding, hence
+        # the norm comparison rather than the bitwise digest)
+        assert r["consensus_digest"] == digest          # async_resume echo
+        np.testing.assert_allclose(r["first_consensus_l2"], ck_l2,
+                                   rtol=1e-5)
+        assert r["base_round"] == 2
+        # monotonic counters: the checkpoint's stamp folds into the
+        # resumed pod's merged snapshot
+        assert r["counters"]["pod.steps"] == 4 * 6 + nproc * 6
+        assert r["counters"]["pod.rounds"] == 4 * 2 + nproc * 2
