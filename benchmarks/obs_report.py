@@ -117,7 +117,10 @@ def main(argv=None):
     from repro.obs.events import read_events
     report = {}
     if args.metrics:
-        events = read_events(args.metrics)      # raises on schema violation
+        # schema violations still raise; a torn FINAL line (writer died
+        # mid-write) is dropped with a warning — post-mortem readers want
+        # the surviving events
+        events = read_events(args.metrics, tolerate_torn_tail=True)
         report["metrics"] = summarize_metrics(events)
     if args.trace:
         with open(args.trace) as f:

@@ -5,11 +5,24 @@ states round-trip through their flattened dict form.  Scalars (step,
 scopes) ride along.  Multi-host note: in a real deployment each host
 writes its addressable shards; here (single host) the full tree is
 gathered and written once.
+
+Crash consistency (PR 10): every write goes tmp-file → flush → fsync →
+atomic ``os.replace``, with the npz's content sha1 recorded in the
+sidecar (npz replaced BEFORE the sidecar, so a sidecar that names a
+digest always describes a complete npz — a crash between the two leaves
+the old sidecar pointing at the old npz, never a torn pair).
+:func:`verify` re-hashes the file against the sidecar digest;
+:func:`resolve` turns a directory (or a corrupt file) into the newest
+checkpoint that verifies, which is what ``--resume`` hands to
+:func:`restore`.  Digest-less (pre-PR-10 or foreign) checkpoints still
+load — they just can't prove integrity beyond the npz header.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import warnings
 from typing import Any
 
 import jax
@@ -17,6 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 SEP = "/"
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint failed its integrity check (torn npz, digest
+    mismatch, or an unreadable sidecar)."""
+
+
+def _npz(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def _flatten_with_paths(tree):
@@ -44,6 +66,14 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _file_digest(path: str) -> str:
+    h = hashlib.sha1()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save(path: str, tree: Any, step: int = 0, meta: dict | None = None,
          algo: str | None = None, metrics: list | None = None):
     """``algo`` stamps the writing algorithm's registry name into the
@@ -54,49 +84,160 @@ def save(path: str, tree: Any, step: int = 0, meta: dict | None = None,
     ``counter_stamp()`` — steps/rounds/tokens so far) rides in the
     sidecar so a resumed run's counters continue monotonically instead
     of restarting at zero; read it back with :func:`saved_metrics`."""
+    path = _npz(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = _flatten_with_paths(tree)
-    np.savez(path, **flat)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    digest = _file_digest(tmp)
+    os.replace(tmp, path)
     meta = dict(meta or {})
     if algo is not None:
         meta["algo"] = algo
     sidecar = {"step": int(step), "keys": sorted(flat.keys()),
-               "meta": meta}
+               "digest": digest, "meta": meta}
     if metrics:
         sidecar["metrics"] = metrics
-    with open(path + ".json", "w") as f:
+    sc_tmp = f"{path}.json.tmp.{os.getpid()}"
+    with open(sc_tmp, "w") as f:
         json.dump(sidecar, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(sc_tmp, path + ".json")
+
+
+def _sidecar(path: str) -> dict | None:
+    """The parsed sidecar, None when absent, raises
+    :class:`CheckpointCorruptError` when unreadable."""
+    try:
+        with open(_npz(path) + ".json") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except ValueError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint sidecar {_npz(path)}.json is unreadable: {e}") \
+            from e
+
+
+def verify(path: str) -> None:
+    """Integrity-check one checkpoint, raising
+    :class:`CheckpointCorruptError` on failure.  With a digest-bearing
+    sidecar the npz content is re-hashed against it (catches torn
+    writes byte-for-byte); digest-less/sidecar-less checkpoints fall
+    back to the npz header being parseable."""
+    path = _npz(path)
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    sidecar = _sidecar(path)
+    want = (sidecar or {}).get("digest")
+    if want is not None:
+        got = _file_digest(path)
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r} content digest {got[:12]} does not "
+                f"match sidecar digest {want[:12]} (torn or tampered "
+                f"write)")
+        return
+    try:
+        np.load(path).files
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} is unreadable: {e}") from e
+
+
+def latest_valid(dirpath: str, exclude=()) -> str | None:
+    """The newest checkpoint in ``dirpath`` that passes :func:`verify`
+    — ordered by sidecar step, then mtime.  None when nothing valid."""
+    try:
+        names = sorted(f for f in os.listdir(dirpath)
+                       if f.endswith(".npz"))
+    except FileNotFoundError:
+        return None
+    ranked = []
+    for name in names:
+        p = os.path.join(dirpath, name)
+        if p in exclude:
+            continue
+        try:
+            sc = _sidecar(p)
+        except CheckpointCorruptError:
+            sc = None
+        step = (sc or {}).get("step", -1)
+        ranked.append((step, os.path.getmtime(p), p))
+    for _, _, p in sorted(ranked, reverse=True):
+        try:
+            verify(p)
+            return p
+        except (CheckpointCorruptError, FileNotFoundError):
+            continue
+    return None
+
+
+def resolve(path: str) -> str:
+    """Turn a ``--resume`` argument into a verified checkpoint file:
+
+    * a directory resolves to its newest valid checkpoint,
+    * a valid file resolves to itself,
+    * a CORRUPT file falls back (with a warning) to the newest other
+      valid checkpoint in its directory — a torn final write must not
+      strand the run when an older good checkpoint sits next to it,
+    * a missing file raises FileNotFoundError (a typo is not a
+      corruption to silently recover from)."""
+    if os.path.isdir(path):
+        best = latest_valid(path)
+        if best is None:
+            raise CheckpointCorruptError(
+                f"no valid checkpoint found in directory {path!r}")
+        return best
+    npz = _npz(path)
+    if not os.path.exists(npz):
+        raise FileNotFoundError(npz)
+    try:
+        verify(npz)
+        return npz
+    except CheckpointCorruptError as e:
+        fallback = latest_valid(os.path.dirname(npz) or ".",
+                                exclude={npz})
+        if fallback is None:
+            raise
+        warnings.warn(f"{e}; falling back to newest valid checkpoint "
+                      f"{fallback!r}")
+        return fallback
 
 
 def saved_meta(path: str) -> dict:
-    if not path.endswith(".npz"):
-        path = path + ".npz"
     try:
-        with open(path + ".json") as f:
-            return json.load(f).get("meta", {})
-    except FileNotFoundError:       # sidecar-less (foreign) checkpoint
+        sc = _sidecar(path)
+    except CheckpointCorruptError:
         return {}
+    return (sc or {}).get("meta", {})
 
 
 def saved_metrics(path: str) -> list:
     """The cumulative counter stamp written by :func:`save` (empty list
     for pre-stamp or sidecar-less checkpoints)."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
     try:
-        with open(path + ".json") as f:
-            return json.load(f).get("metrics", [])
-    except FileNotFoundError:
+        sc = _sidecar(path)
+    except CheckpointCorruptError:
         return []
+    return (sc or {}).get("metrics", [])
 
 
 def restore(path: str, like: Any, algo: str | None = None) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes preserved).
 
+    The path goes through :func:`resolve` first — a directory picks its
+    newest valid checkpoint, a digest mismatch falls back to the newest
+    valid sibling (callers that also read the sidecar should resolve
+    once themselves and pass the resolved file everywhere).
+
     ``algo``: expected algorithm name; raises ValueError when the
     checkpoint's sidecar was stamped by a different algorithm."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
+    path = resolve(path)
     if algo is not None:
         stamped = saved_meta(path).get("algo")
         if stamped is not None and stamped != algo:
@@ -113,8 +254,8 @@ def restore(path: str, like: Any, algo: str | None = None) -> Any:
     # target leaf's dtype, bit-exactly
     flat_paths, _ = jax.tree_util.tree_flatten_with_path(like)
     ordered = [None] * len(flat_paths)
-    for i, (path, leaf) in enumerate(flat_paths):
-        key = SEP.join(_path_str(p) for p in path)
+    for i, (path_, leaf) in enumerate(flat_paths):
+        key = SEP.join(_path_str(p) for p in path_)
         arr = data[key]
         like_dtype = np.dtype(getattr(leaf, "dtype", type(leaf)))
         if arr.dtype == np.uint16 and like_dtype != np.uint16:
@@ -151,15 +292,14 @@ def load_flat(path: str) -> dict:
     as written (bf16 leaves stay uint16 bit patterns).  For consumers
     whose restore-time structure legitimately differs from the writer's
     — e.g. an elastic async pod resuming with a different worker count
-    reads the consensus vectors without any ``like`` tree."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
+    reads the consensus vectors without any ``like`` tree.  Digest-
+    verified when the sidecar carries one."""
+    path = _npz(path)
+    verify(path)
     data = np.load(path)
     return {k: data[k] for k in data.files}
 
 
 def latest_step(path: str) -> int:
-    if not path.endswith(".npz"):
-        path = path + ".npz"
-    with open(path + ".json") as f:
+    with open(_npz(path) + ".json") as f:
         return json.load(f)["step"]

@@ -973,6 +973,63 @@ def staleness_weighted_mean(means, counts, rounds, decay=0.5):
     return jax.tree.map(leaf, *means)
 
 
+def contribution_norm(means) -> float:
+    """L2 norm of a worker's dequantized contribution (flat per-leaf
+    vectors), accumulated in float64 on host.  NaN/Inf anywhere in the
+    contribution propagates into the result — the quarantine check
+    keys off exactly that."""
+    import numpy as np
+    total = 0.0
+    for v in means:
+        a = np.asarray(v, np.float64).ravel()
+        total += float(np.dot(a, a))
+    return float(np.sqrt(total))
+
+
+def should_quarantine(norm: float, trailing, k: float = 10.0,
+                      min_history: int = 3):
+    """Poisoned-update gate for :func:`staleness_weighted_mean` ingest:
+    a contribution is quarantined when its norm is non-finite (NaN/Inf
+    — one poisoned replica would otherwise contaminate the consensus
+    for EVERY worker) or, once ``min_history`` accepted contributions
+    established a trailing baseline, more than ``k``× the trailing
+    median norm (a diverged-but-finite replica).  Returns
+    ``(quarantine, reason)``; quarantined contributions never enter the
+    trailing window, so one outlier cannot drag the baseline up."""
+    import numpy as np
+    if not np.isfinite(norm):
+        return True, "nonfinite"
+    hist = list(trailing)
+    if len(hist) >= min_history:
+        med = float(np.median(np.asarray(hist, np.float64)))
+        if med > 0.0 and norm > k * med:
+            return True, (f"norm {norm:.3e} exceeds {k:g}x trailing "
+                          f"median {med:.3e}")
+    return False, ""
+
+
+def reseed_from_consensus(state: ParleState, xbar) -> ParleState:
+    """Recovery for a quarantined worker: restart every local replica
+    FROM the consensus — x = y = z = xbar (broadcast over the replica
+    axis), momenta and the error-feedback residual zeroed, ``step``
+    and scopes kept so the annealing schedule is undisturbed.  Each
+    field gets its own freshly materialized buffers (broadcast views
+    would alias x/y/z into one buffer, which a donating round fn
+    rejects)."""
+
+    def bcast(leaf, like, dtype):
+        return jnp.array(jnp.broadcast_to(
+            jnp.asarray(leaf, jnp.float32), like.shape), dtype=dtype)
+
+    x = jax.tree.map(lambda v, l: bcast(v, l, jnp.float32), xbar, state.x)
+    y = jax.tree.map(lambda v, l: bcast(v, l, l.dtype), xbar, state.y)
+    z = jax.tree.map(lambda v, l: bcast(v, l, jnp.float32), xbar, state.z)
+    return state._replace(
+        x=x, y=y, z=z,
+        v_y=tree_zeros_like(x), v_x=tree_zeros_like(x),
+        e=tree_zeros_like(x) if state.e is not None else None)
+
+
 def make_inner_round_fn(loss_fn: Callable, cfg, weight_decay: float = 0.0,
                         use_kernel: bool = False, lr_schedule=None):
     """The async round's compute half: ONE donated compiled program

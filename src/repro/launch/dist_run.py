@@ -99,8 +99,21 @@ def build_argparser():
                          "per-worker contribution stamps) here")
     ap.add_argument("--resume", default="",
                     help="async: resume the consensus from a "
-                         "--checkpoint-out file; the worker count may "
+                         "--checkpoint-out file OR a checkpoint "
+                         "directory (resolves to its newest valid "
+                         "checkpoint; a corrupt file falls back to the "
+                         "newest valid sibling); the worker count may "
                          "differ from the writing pod's")
+    ap.add_argument("--fault-plan", default="",
+                    help="chaos harness: a seeded FaultPlan as inline "
+                         "JSON or @file (runtime/faults.py) — scripted "
+                         "worker crash/hang/drop/corrupt/poison/jitter "
+                         "faults plus coordinator kills, replayed "
+                         "deterministically from the plan seed")
+    ap.add_argument("--liveness-s", type=float, default=30.0,
+                    help="async: coordinator heartbeat-liveness "
+                         "deadline; a worker silent this long is "
+                         "evicted from the consensus table")
     ap.add_argument("--no-compare", action="store_true",
                     help="skip the single-process reference run")
     ap.add_argument("--tol", type=float, default=0.0,
@@ -328,7 +341,7 @@ def _run_async_worker(args) -> list:
     from repro.models.model import build_model
     from repro.obs import Obs
     from repro.runtime import (AsyncElasticPolicy, CoordinatorClient,
-                               RoundRunner, consensus_digest)
+                               FaultPlan, RoundRunner, consensus_digest)
 
     n_total = args.replicas or args.nproc
     if n_total % args.nproc:
@@ -350,9 +363,14 @@ def _run_async_worker(args) -> list:
         batches_per_epoch=max(args.steps // 4, 1),
         sync_compress=args.sync_compress))
 
+    wfaults = (FaultPlan.from_spec(args.fault_plan).worker_faults(proc)
+               if args.fault_plan else None)
     coord_port = args.coord_port or args.port + 1
-    client = CoordinatorClient(coord_port, worker=f"worker{proc}",
-                               count=local_n)
+    # heartbeat a few times per liveness window so only a TRUE hang
+    # (frozen beater included) crosses the eviction deadline
+    client = CoordinatorClient(
+        coord_port, worker=f"worker{proc}", count=local_n,
+        heartbeat_s=min(max(args.liveness_s / 3.0, 0.05), 1.0))
     hello = client.join()
     base_round = hello["round"]
 
@@ -367,7 +385,8 @@ def _run_async_worker(args) -> list:
         state = state._replace(x=rep, y=rep, z=rep)
     state = parle.dealias_state(state)  # donated rounds need own buffers
 
-    policy = AsyncElasticPolicy(client, pcfg, obs, worker=proc)
+    policy = AsyncElasticPolicy(client, pcfg, obs, worker=proc,
+                                faults=wfaults)
     round_fn = policy.make_round_fn(algo, model.loss, pcfg)
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                          batch_size=args.batch, seed=args.seed)
@@ -389,6 +408,10 @@ def _run_async_worker(args) -> list:
     def pre_round(r):
         if args.straggle_ms > 0 and proc == args.straggle_worker:
             time.sleep(args.straggle_ms / 1e3)
+        if wfaults is not None:
+            # the fault "round" is the GLOBAL consensus round this
+            # local round's exchange will carry (base_round + r + 1)
+            wfaults.pre_round(base_round + r + 1, client=client, obs=obs)
 
     def post_round(state, r, gstep, metrics):
         return policy.exchange(state, base_round + r, gstep, metrics)
@@ -455,7 +478,7 @@ def _losses(output: str) -> list:
             for line in output.splitlines() if line.startswith(LOSS_TAG)]
 
 
-def _wait_workers(procs):
+def _wait_workers(procs, tolerate=frozenset()):
     """Reap the pod, draining all pipes concurrently (a failed worker
     can fill its pipe with a long traceback while its peers block in a
     collective — a serial read would deadlock the launcher).
@@ -463,9 +486,14 @@ def _wait_workers(procs):
     If any worker exits nonzero while peers are still running, the
     survivors are wedged (their next collective waits on a corpse
     forever): kill each survivor's whole process group and report the
-    FAILING worker, not the -9s we inflicted.  Returns
-    (outputs, failed_index_or_None, n_killed)."""
+    FAILING worker, not the -9s we inflicted.  ``tolerate`` names the
+    worker indices a chaos plan crashes on purpose: exactly those, at
+    exactly the scripted exit code, are NOT failures (the async
+    survivors keep running — an elastic pod outlives a dead member).
+    Returns (outputs, failed_index_or_None, n_killed)."""
     from concurrent.futures import ThreadPoolExecutor
+
+    from repro.runtime.faults import CRASH_RC
     pool = ThreadPoolExecutor(max_workers=len(procs))
     futs = [pool.submit(p.communicate) for p in procs]
     failed, killed = None, 0
@@ -473,7 +501,8 @@ def _wait_workers(procs):
         codes = [p.poll() for p in procs]
         if failed is None:
             for i, rc in enumerate(codes):
-                if rc not in (None, 0):
+                if rc not in (None, 0) and not (i in tolerate
+                                                and rc == CRASH_RC):
                     failed = i
                     break
         if failed is not None and any(c is None for c in codes):
@@ -503,7 +532,8 @@ def _fail_pod(procs, outs, failed, killed):
     return rc if rc else 1
 
 
-def _merge_pod_obs(args, sink=None, extra_counters=None):
+def _merge_pod_obs(args, sink=None, extra_counters=None,
+                   evicted_workers=0):
     """Coordinator-side aggregation: fold every worker's final registry
     snapshot into one pod view (merge is associative — any fold order
     gives the same result) and concatenate the worker traces into one
@@ -512,17 +542,24 @@ def _merge_pod_obs(args, sink=None, extra_counters=None):
     A worker whose ``<path>.worker<i>`` file is missing (or holds no
     final snapshot — it crashed mid-run) is logged as a ``note`` event
     and counted in the ``pod_merged`` event's ``missing_workers`` field
-    instead of silently shrinking the pod view.  ``extra_counters`` (a
-    checkpoint counter stamp) folds resumed totals in so pod counters
-    stay monotonic across elastic resumes.  Returns the merged snapshot
-    (or None without --metrics-out)."""
+    instead of silently shrinking the pod view; a crashed worker's
+    SURVIVING events still fold in (torn final line tolerated — the
+    per-event flush means everything before the crash is on disk).
+    ``evicted_workers`` (the coordinator's heartbeat-eviction count) is
+    recorded as its own field: an evicted worker was hung-but-alive and
+    usually finalizes, so it is a DIFFERENT failure than a missing
+    file.  ``extra_counters`` (a checkpoint counter stamp) folds
+    resumed totals in so pod counters stay monotonic across elastic
+    resumes.  Returns the merged snapshot (or None without
+    --metrics-out)."""
     merged = None
     if args.metrics_out:
         from repro.obs import EventSink, merge_snapshots, read_events
         snaps, missing = [], []
         for i in range(args.nproc):
             try:
-                evs = read_events(f"{args.metrics_out}.worker{i}")
+                evs = read_events(f"{args.metrics_out}.worker{i}",
+                                  tolerate_torn_tail=True)
             except FileNotFoundError:
                 missing.append(i)
                 continue
@@ -543,12 +580,15 @@ def _merge_pod_obs(args, sink=None, extra_counters=None):
                 merged, {"counters": list(extra_counters), "gauges": [],
                          "hists": []})
         rec = sink.emit("pod_merged", processes=len(snaps),
-                        missing_workers=len(missing), snapshot=merged)
+                        missing_workers=len(missing),
+                        evicted_workers=int(evicted_workers),
+                        snapshot=merged)
         if own_sink:
             sink.close()
         print(json.dumps({"pod_merged": args.metrics_out,
                           "processes": rec["processes"],
-                          "missing_workers": rec["missing_workers"]}),
+                          "missing_workers": rec["missing_workers"],
+                          "evicted_workers": rec["evicted_workers"]}),
               flush=True)
     if args.trace_out:
         events = []
@@ -586,59 +626,103 @@ def _base_args(args):
 
 
 def _run_async_pod(args) -> int:
-    """Async-pod parent: host the consensus Coordinator, spawn the
-    elastic workers, merge their telemetry, optionally checkpoint the
-    consensus for an elastic resume."""
+    """Async-pod parent: host the consensus coordinator (behind its
+    kill/restart supervisor), spawn the elastic workers, merge their
+    telemetry, optionally checkpoint the consensus for an elastic
+    resume.  With ``--fault-plan`` the parent fires the plan's
+    coordinator kills and tolerates exactly the worker crashes the plan
+    scripts; the merged snapshot carries the pod-lifetime fault
+    counters (quarantines, evictions, restarts, corrupt frames)."""
+    import tempfile
+
     from repro.checkpoint import checkpoint as ckpt
     from repro.obs import EventSink
-    from repro.runtime import Coordinator, load_consensus
+    from repro.runtime import CoordinatorSupervisor, FaultPlan, \
+        load_consensus
 
+    plan = (FaultPlan.from_spec(args.fault_plan) if args.fault_plan
+            else FaultPlan())
+    kills = plan.coordinator_kills()
+    tolerate = plan.crash_workers()
     coord_port = args.coord_port or args.port + 1
     sink = EventSink(args.metrics_out) if args.metrics_out else None
     consensus, start_round, extra_counters = None, 0, None
     if args.resume:
+        args.resume = ckpt.resolve(args.resume)   # dir / corrupt-fallback
         vectors, rnd, meta = load_consensus(args.resume)
         consensus, start_round = vectors, rnd
         extra_counters = ckpt.saved_metrics(args.resume)
         print(json.dumps({"async_resume": args.resume, "round": rnd,
                           "consensus_digest": meta.get("digest", "")}),
               flush=True)
-    coord = Coordinator(coord_port, method=args.sync_compress,
-                        decay=args.decay, sink=sink, consensus=consensus,
-                        start_round=start_round)
+    # periodic crash-recovery checkpoints: required for scripted
+    # coordinator kills (the restart source), and kept next to
+    # --checkpoint-out when one was asked for
+    ck_dir = ""
+    if args.checkpoint_out:
+        ck_dir = args.checkpoint_out + ".d"
+    elif kills:
+        ck_dir = tempfile.mkdtemp(prefix="repro_async_ck_")
+    sup = CoordinatorSupervisor(
+        coord_port, kills=kills, sink=sink, method=args.sync_compress,
+        decay=args.decay, consensus=consensus, start_round=start_round,
+        liveness_s=args.liveness_s, ck_dir=ck_dir)
     print(json.dumps({"launch": "dist_run", "mode": "async",
                       "nproc": args.nproc, "coord_port": coord_port,
                       "replicas": args.replicas or args.nproc,
-                      "rounds": args.steps // args.L}), flush=True)
+                      "rounds": args.steps // args.L,
+                      "faults": len(plan.faults)}), flush=True)
 
     base = _base_args(args) + [
         "--sync-policy", "async", "--sync-compress", args.sync_compress,
-        "--decay", str(args.decay), "--coord-port", str(coord_port)]
+        "--decay", str(args.decay), "--coord-port", str(coord_port),
+        "--liveness-s", str(args.liveness_s)]
+    if args.fault_plan:
+        base += ["--fault-plan", plan.to_json()]
     procs = [_spawn(args, base + ["--nproc", str(args.nproc),
                                   "--_worker", str(i)]
                     + _worker_flags(args, i), {})
              for i in range(args.nproc)]
-    outs, failed, killed = _wait_workers(procs)
+    outs, failed, killed = _wait_workers(procs, tolerate=tolerate)
     try:
         if failed is not None:
             return _fail_pod(procs, outs, failed, killed)
+        crashed = [i for i, p in enumerate(procs) if p.returncode]
+        for i in crashed:
+            sys.stderr.write(f"worker {i} crashed per fault plan "
+                             f"(rc={procs[i].returncode}); pod "
+                             f"continued without it\n")
         sys.stdout.write(outs[0])
-        if not _losses(outs[0]):
+        if not _losses(outs[0]) and 0 not in crashed:
             sys.stderr.write("worker 0 produced no loss records\n"
                              + outs[0])
             return 1
-        merged = _merge_pod_obs(args, sink=sink,
-                                extra_counters=extra_counters)
+        fault_counters = [
+            {"name": "pod.evicted_workers", "labels": {},
+             "total": sup.counter("evictions")},
+            {"name": "pod.coordinator_restarts", "labels": {},
+             "total": sup.restarts},
+            {"name": "pod.worker_crashes", "labels": {},
+             "total": len(crashed)},
+            {"name": "pod.corrupt_frames", "labels": {},
+             "total": sup.counter("corrupt_frames")},
+            {"name": "pod.duplicate_exchanges", "labels": {},
+             "total": sup.counter("duplicates")},
+        ]
+        merged = _merge_pod_obs(
+            args, sink=sink,
+            extra_counters=fault_counters + list(extra_counters or []),
+            evicted_workers=sup.counter("evictions"))
         if args.checkpoint_out:
-            coord.save(args.checkpoint_out,
-                       metrics=(merged or {}).get("counters"))
+            sup.save(args.checkpoint_out,
+                     metrics=(merged or {}).get("counters"))
             print(json.dumps({"async_checkpoint": args.checkpoint_out,
-                              "round": coord.round,
-                              "consensus_digest": coord.digest()}),
+                              "round": sup.round,
+                              "consensus_digest": sup.digest()}),
                   flush=True)
         return 0
     finally:
-        coord.close()
+        sup.close()
         if sink is not None:
             sink.close()
 

@@ -100,8 +100,12 @@ def build_argparser():
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", default="",
-                    help="checkpoint path to restore (validates that it "
-                         "was written by the same --algo)")
+                    help="checkpoint file OR directory to restore (a "
+                         "directory resolves to its newest valid "
+                         "checkpoint; digests are verified and a corrupt "
+                         "file falls back to the newest valid sibling; "
+                         "validates that it was written by the same "
+                         "--algo)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="",
                     help="write schema-versioned JSONL events + a final "
@@ -156,6 +160,10 @@ def main(argv=None):
     state = algo.init(params, pcfg)
     start = 0
     if args.resume:
+        # resolve ONCE (directory -> newest valid checkpoint; corrupt
+        # file -> newest valid sibling) so the restore, the step stamp,
+        # and the counter stamp all read the SAME verified file
+        args.resume = ckpt.resolve(args.resume)
         state = ckpt.restore(args.resume, state, algo=args.algo)
         try:                    # continue the stream + checkpoint numbering
             start = ckpt.latest_step(args.resume)

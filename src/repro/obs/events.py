@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
+import warnings
 from typing import IO, List, Optional
 
 SCHEMA_VERSION = 1
@@ -52,6 +54,13 @@ KINDS = {
     # async/elastic pod membership (coordinator-side)
     "worker_join": {"worker": str, "n_active": int},
     "worker_leave": {"worker": str, "n_active": int},
+    # fault tolerance: liveness eviction of a hung worker, quarantine of
+    # a poisoned contribution, chaos-harness injections, and a
+    # supervisor-driven coordinator restart
+    "worker_evicted": {"worker": str, "n_active": int},
+    "worker_quarantined": {"worker": str, "reason": str},
+    "fault_injected": {"fault": str, "round": int},
+    "coordinator_restart": {"round": int, "restarts": int},
     # registry dump (train/serve final state, or per-worker)
     "metrics_snapshot": {"snapshot": dict},
 }
@@ -84,11 +93,18 @@ def validate_event(rec: dict) -> dict:
 
 
 class EventSink:
-    """Append-only JSONL writer (``path=None``: validate-only, no file)."""
+    """Append-only JSONL writer (``path=None``: validate-only, no file).
+
+    Thread-safe and flushed per event: the async coordinator emits from
+    its per-connection serve threads, the liveness reaper, AND the
+    kill/restart supervisor concurrently, and a crashed process must
+    leave every line it ever emitted on disk for the post-mortem — a
+    buffered tail would be exactly the evidence a crash destroys."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._f: Optional[IO] = None
+        self._lock = threading.Lock()
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             self._f = open(path, "w")
@@ -97,27 +113,43 @@ class EventSink:
         rec = {"v": SCHEMA_VERSION, "kind": kind,
                "ts": round(time.time(), 3), **fields}
         validate_event(rec)
-        if self._f is not None:
-            self._f.write(json.dumps(rec) + "\n")
-            self._f.flush()
+        with self._lock:
+            if self._f is not None:
+                self._f.write(json.dumps(rec) + "\n")
+                self._f.flush()
         return rec
 
     def close(self) -> None:
-        if self._f is not None:
-            self._f.close()
-            self._f = None
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
 
 
-def read_events(path: str) -> List[dict]:
-    """Load + re-validate a metrics JSONL file."""
-    out = []
+def read_events(path: str, tolerate_torn_tail: bool = False) -> List[dict]:
+    """Load + re-validate a metrics JSONL file.
+
+    ``tolerate_torn_tail=True`` forgives ONE torn final line — a
+    process that died mid-``write`` leaves a truncated last record,
+    and the post-mortem reader wants the surviving events, not a parse
+    error.  Only the LAST line gets this grace, and only for broken
+    JSON: an earlier bad line, or a complete-but-invalid record, is
+    still corruption worth raising on."""
     with open(path) as f:
-        for i, line in enumerate(f):
-            line = line.strip()
-            if not line:
+        lines = [(i, ln.strip()) for i, ln in enumerate(f)]
+    lines = [(i, ln) for i, ln in lines if ln]
+    out = []
+    for pos, (i, line) in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            if tolerate_torn_tail and pos == len(lines) - 1:
+                warnings.warn(f"{path}:{i + 1}: dropping torn final "
+                              f"line ({e})")
                 continue
-            try:
-                out.append(validate_event(json.loads(line)))
-            except ValueError as e:
-                raise ValueError(f"{path}:{i + 1}: {e}") from e
+            raise ValueError(f"{path}:{i + 1}: {e}") from e
+        try:
+            out.append(validate_event(rec))
+        except ValueError as e:
+            raise ValueError(f"{path}:{i + 1}: {e}") from e
     return out

@@ -1,12 +1,24 @@
 """Execution runtime: the ONE step/round loop (``RoundRunner``) behind
 the train and dist_run drivers, parameterized by a pluggable
 ``SyncPolicy`` (barrier / overlap / async-elastic) with the host-side
-consensus ``Coordinator`` for the async policy."""
+consensus ``Coordinator`` for the async policy, its kill/restart
+``CoordinatorSupervisor``, and the deterministic chaos harness
+(``FaultPlan``, runtime/faults.py)."""
 from repro.runtime.coordinator import (  # noqa: F401
     Coordinator,
     CoordinatorClient,
+    CoordinatorStopped,
+    CoordinatorSupervisor,
+    CoordinatorUnavailable,
+    FrameError,
     consensus_digest,
     load_consensus,
+)
+from repro.runtime.faults import (  # noqa: F401
+    CRASH_RC,
+    FaultPlan,
+    WorkerFaults,
+    poison_payload,
 )
 from repro.runtime.policies import (  # noqa: F401
     POLICY_NAMES,

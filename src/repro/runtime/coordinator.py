@@ -4,25 +4,54 @@ One parent-process ``Coordinator`` holds the latest staleness-weighted
 consensus as flat per-leaf f32 vectors (tree_flatten order of the model
 x — structure-agnostic, so workers of any local layout interoperate).
 Each ``dist_run`` worker connects a ``CoordinatorClient`` over a local
-``multiprocessing.connection`` socket and speaks four ops:
+``multiprocessing.connection`` socket and speaks five ops:
 
-* ``join``     — announce itself (+ its local replica count); gets the
+* ``join``      — announce itself (+ its local replica count); gets the
   current consensus (None on a fresh start), the consensus round, and
   the active-worker count back.  Emits a ``worker_join`` event.
-* ``exchange`` — push the worker's dequantize-ready contribution for
+* ``exchange``  — push the worker's dequantize-ready contribution for
   ITS just-finished round, pull the refreshed consensus.  No barrier:
   the reply is computed from whatever the OTHER workers last pushed,
   weighted down by how many rounds behind they are.
-* ``leave``    — deregister; the worker's contribution leaves the table
+* ``leave``     — deregister; the worker's contribution leaves the table
   so the consensus rebalances over the survivors (elastic shrink).
   Emits ``worker_leave``.  A dead connection (EOF) is an implicit
   leave — a crashed worker cannot wedge the consensus.
-* ``stop``     — shut the serving loop down.
+* ``heartbeat`` — liveness ping from a client-side daemon thread.  A
+  worker whose heartbeats (and exchanges) stop for longer than
+  ``liveness_s`` is EVICTED from the consensus table by the reaper —
+  the hung-but-not-dead case a socket EOF never catches.  Emits
+  ``worker_evicted``.
+* ``stop``      — shut the serving loop down.  Clients that reach a
+  stopped coordinator get a ``stopped`` error reply and raise
+  :class:`CoordinatorStopped` instead of spinning their retry loop.
 
 The consensus math itself — ``staleness_weighted_mean`` with weights
 ``w_a = count_a * decay ** (r_max - r_a)`` — lives in
 ``repro.core.parle`` next to the rest of the Eq. 8 math; this module is
 only the wire/coordination half.
+
+Fault tolerance (PR 10):
+
+* Every message travels as a length+CRC32-framed pickle inside the
+  ``multiprocessing.connection`` transport; a frame whose checksum
+  does not match is rejected with a retryable ``bad_frame`` reply and
+  the client re-sends it, so a flipped bit never reaches the table.
+* ``exchange`` is idempotent: the reply for each (worker, round) is
+  cached, and a duplicate push — the client re-sending after a lost
+  reply — returns the cached reply without re-folding the table.
+* Contributions carrying NaN/Inf, or a norm more than ``quarantine_k``×
+  the trailing-median accepted norm, are quarantined at ingest: they
+  never touch the table, the reply tells the worker to re-seed from
+  consensus, and ``worker_quarantined`` is emitted (policy counts
+  ``pod.quarantined_updates``).
+* With ``ck_dir`` set the coordinator checkpoints the consensus on
+  every global round advance (atomic, digest-verified — see
+  ``repro.checkpoint``); :class:`CoordinatorSupervisor` can kill the
+  coordinator mid-run (abruptly severing every socket, discarding all
+  in-memory state) and restart it from the newest valid checkpoint on
+  the same port — clients transparently reconnect, re-join, and re-send
+  the in-flight exchange.
 
 Elastic checkpointing: :meth:`Coordinator.save` writes the consensus
 vectors + per-worker contribution stamps through the ordinary flat-npz
@@ -33,13 +62,73 @@ model-shaped consensus, not any per-worker state layout.
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
+import random
+import select
+import socket
+import struct
+import sys
 import threading
+import time
+import zlib
+from collections import deque
 from multiprocessing.connection import Client, Listener
 
 import numpy as np
 
 AUTHKEY = b"repro-async-consensus"
 _CHUNK = 1024           # == core.compress.CHUNK (int8 scale granularity)
+_HDR = struct.Struct("!II")    # (payload length, CRC32) frame header
+
+
+class FrameError(RuntimeError):
+    """A received frame failed its length or CRC32 check."""
+
+
+class FrameTimeout(FrameError):
+    """No reply frame arrived within the RPC timeout."""
+
+
+class CoordinatorStopped(RuntimeError):
+    """The coordinator was shut down on purpose — not a transient
+    failure, so the client must NOT spin its retry loop against it."""
+
+
+class CoordinatorUnavailable(ConnectionError):
+    """The coordinator stayed unreachable past the retry deadline."""
+
+
+def _send_frame(conn, obj, corrupt: bool = False) -> None:
+    """Pickle ``obj`` into a CRC32-framed message.  ``corrupt=True``
+    flips one payload byte AFTER the checksum is computed — the chaos
+    harness's wire-corruption injection."""
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    header = _HDR.pack(len(payload), zlib.crc32(payload) & 0xFFFFFFFF)
+    if corrupt:
+        flipped = bytearray(payload)
+        flipped[len(flipped) // 2] ^= 0xFF
+        payload = bytes(flipped)
+    conn.send_bytes(header + payload)
+
+
+def _recv_frame(conn, timeout=None):
+    """Receive + verify one framed message.  Raises :class:`FrameError`
+    on a short/mismatched frame and :class:`FrameTimeout` when nothing
+    arrives within ``timeout`` seconds."""
+    if timeout is not None and not conn.poll(timeout):
+        raise FrameTimeout(f"no frame within {timeout:.1f}s")
+    buf = conn.recv_bytes()
+    if len(buf) < _HDR.size:
+        raise FrameError(f"short frame ({len(buf)} bytes)")
+    length, crc = _HDR.unpack_from(buf)
+    payload = buf[_HDR.size:]
+    if len(payload) != length:
+        raise FrameError(f"frame length mismatch: header says {length}, "
+                         f"got {len(payload)}")
+    if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+        raise FrameError("frame CRC mismatch")
+    return pickle.loads(payload)
 
 
 def _np_dequant(q, scales, method: str):
@@ -78,31 +167,71 @@ class Coordinator:
     bottleneck and keeps the fold deterministic)."""
 
     def __init__(self, port: int, method: str = "none", decay: float = 0.5,
-                 sink=None, consensus=None, start_round: int = 0):
+                 sink=None, consensus=None, start_round: int = 0,
+                 liveness_s: float = 30.0, quarantine_k: float = 10.0,
+                 ck_dir: str = "", ck_keep: int = 4):
         self.method = method
         self.decay = decay
         self.sink = sink
+        self.liveness_s = liveness_s
+        self.quarantine_k = quarantine_k
+        self.ck_dir = ck_dir
+        self.ck_keep = ck_keep
         self._lock = threading.Lock()
         # worker -> {"mean": [f32 vec per leaf], "count", "round"}
         self._table: dict = {}
         self._active: set = set()
+        self._last_seen: dict = {}          # worker -> monotonic stamp
+        self._replies: dict = {}            # worker -> (round, reply)
+        self._norms = deque(maxlen=32)      # trailing ACCEPTED norms
         self.consensus = consensus      # list of flat f32 vectors | None
         self.round = start_round
         self.exchanges = 0
+        self.evictions = 0
+        self.quarantines = 0
+        self.corrupt_frames = 0
+        self.duplicates = 0
+        if ck_dir:
+            os.makedirs(ck_dir, exist_ok=True)
         self._listener = Listener(("127.0.0.1", port), authkey=AUTHKEY)
         self._stopping = threading.Event()
+        self._crashed = False
+        self._conns: list = []
         self._conn_threads: list = []
         self._accept_thread = threading.Thread(
             target=self._accept_loop, daemon=True)
         self._accept_thread.start()
+        self._reaper = threading.Thread(target=self._reap_loop, daemon=True)
+        self._reaper.start()
 
     # -- serving loop ---------------------------------------------
     def _accept_loop(self):
+        # poll before accept: a thread BLOCKED in accept() pins the
+        # closed listening socket alive in the kernel (the port stays
+        # LISTEN after close()), which would make a supervisor restart
+        # on the same port impossible
+        lsock = self._listener._listener._socket
         while not self._stopping.is_set():
+            try:
+                ready, _, _ = select.select([lsock], [], [], 0.05)
+            except (OSError, ValueError):      # listener closed
+                return
+            if not ready:
+                continue
             try:
                 conn = self._listener.accept()
             except (OSError, EOFError):        # listener closed
                 return
+            # accepted sockets must carry SO_REUSEADDR too: otherwise
+            # their FIN_WAIT/TIME_WAIT corpses after a crash() block the
+            # restarted coordinator's bind on this port
+            try:
+                s = socket.socket(fileno=os.dup(conn.fileno()))
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                s.close()
+            except OSError:                    # pragma: no cover
+                pass
+            self._conns.append(conn)
             t = threading.Thread(target=self._serve, args=(conn,),
                                  daemon=True)
             t.start()
@@ -110,35 +239,87 @@ class Coordinator:
 
     def _serve(self, conn):
         worker = None
+        linger = None
         try:
             while True:
-                msg = conn.recv()
+                if self._crashed:
+                    return
+                if not conn.poll(0.05):
+                    if self._stopping.is_set():
+                        # polite stop: linger briefly so in-flight
+                        # clients get a "stopped" reply, not a retry
+                        # storm against a dead socket
+                        if linger is None:
+                            linger = time.monotonic()
+                        elif time.monotonic() - linger > 1.0:
+                            return
+                    continue
+                try:
+                    msg = _recv_frame(conn)
+                except FrameError as e:
+                    with self._lock:
+                        self.corrupt_frames += 1
+                    _send_frame(conn, {"error": "bad_frame",
+                                       "retryable": True,
+                                       "detail": str(e)})
+                    continue
                 op = msg.get("op")
+                if self._stopping.is_set() and op not in ("leave", "stop"):
+                    _send_frame(conn, {"error": "stopped"})
+                    continue
                 if op == "join":
                     worker = msg["worker"]
-                    conn.send(self._join(worker, msg.get("count", 1)))
+                    _send_frame(conn, self._join(worker,
+                                                 msg.get("count", 1)))
                 elif op == "exchange":
                     worker = msg["worker"]
-                    conn.send(self._exchange(
+                    _send_frame(conn, self._exchange(
                         worker, msg["payload"], msg["round"],
                         msg.get("count", 1)))
+                elif op == "heartbeat":
+                    worker = msg.get("worker", worker)
+                    with self._lock:
+                        if worker is not None:
+                            self._last_seen[worker] = time.monotonic()
+                    _send_frame(conn, {"ok": True, "op": "heartbeat"})
                 elif op == "leave":
                     self._leave(worker or msg.get("worker"))
-                    conn.send({"ok": True})
+                    _send_frame(conn, {"ok": True})
                     return
                 elif op == "stop":
-                    conn.send({"ok": True})
+                    _send_frame(conn, {"ok": True})
                     self._stopping.set()
                     return
                 else:
-                    conn.send({"error": f"unknown op {op!r}"})
-        except EOFError:
+                    _send_frame(conn, {"error": f"unknown op {op!r}"})
+        except (EOFError, OSError):
             # dead worker == implicit leave: its contribution must not
-            # pin the consensus forever
-            if worker is not None and worker in self._active:
+            # pin the consensus forever (crash() closes every socket —
+            # that is NOT a leave, the restarted coordinator wants the
+            # worker back)
+            if (not self._stopping.is_set() and worker is not None
+                    and worker in self._active):
                 self._leave(worker)
         finally:
-            conn.close()
+            try:
+                conn.close()
+            except OSError:                 # pragma: no cover
+                pass
+
+    def _reap_loop(self):
+        period = max(min(self.liveness_s / 4.0, 1.0), 0.02)
+        while not self._stopping.wait(period):
+            now = time.monotonic()
+            with self._lock:
+                for w in list(self._table):
+                    seen = self._last_seen.get(w)
+                    if seen is not None and now - seen > self.liveness_s:
+                        self._table.pop(w, None)
+                        self._active.discard(w)
+                        self._last_seen.pop(w, None)
+                        self.evictions += 1
+                        self._emit("worker_evicted", worker=str(w),
+                                   n_active=len(self._active))
 
     # -- ops (all under the lock) ---------------------------------
     def _emit(self, kind, **fields):
@@ -148,6 +329,7 @@ class Coordinator:
     def _join(self, worker, count):
         with self._lock:
             self._active.add(worker)
+            self._last_seen[worker] = time.monotonic()
             self._emit("worker_join", worker=str(worker),
                        n_active=len(self._active))
             return {"consensus": self.consensus, "round": self.round,
@@ -157,27 +339,59 @@ class Coordinator:
         with self._lock:
             self._active.discard(worker)
             self._table.pop(worker, None)
+            self._last_seen.pop(worker, None)
             self._emit("worker_leave", worker=str(worker),
                        n_active=len(self._active))
 
     def _exchange(self, worker, payload, round_idx, count):
+        from repro.core import parle
+        with self._lock:
+            self._last_seen[worker] = time.monotonic()
+            cached = self._replies.get(worker)
+            if cached is not None and cached[0] == round_idx:
+                # duplicate push (client re-sent after a lost reply):
+                # idempotent — return the cached reply, don't re-fold
+                self.duplicates += 1
+                return cached[1]
         means = [_np_dequant(leaf["q"], leaf["scales"], self.method)
                  .mean(axis=0) for leaf in payload]
+        norm = parle.contribution_norm(means)
         with self._lock:
             self._active.add(worker)
+            bad, reason = parle.should_quarantine(
+                norm, self._norms, k=self.quarantine_k)
+            if bad:
+                self.quarantines += 1
+                self._emit("worker_quarantined", worker=str(worker),
+                           reason=reason)
+                reply = {"consensus": self.consensus,
+                         "staleness": max(self.round - round_idx, 0),
+                         "n_active": len(self._active),
+                         "quarantined": True, "reason": reason}
+                self._replies[worker] = (round_idx, reply)
+                return reply
+            self._norms.append(norm)
             self._table[worker] = {"mean": means, "count": count,
                                    "round": round_idx}
             # deterministic fold order: sorted worker names
             rows = [self._table[w] for w in sorted(self._table)]
-            from repro.core import parle
+            prev_round = self.round
             self.consensus = parle.staleness_weighted_mean(
                 [r["mean"] for r in rows], [r["count"] for r in rows],
                 [r["round"] for r in rows], decay=self.decay)
             self.round = max(r["round"] for r in rows)
             self.exchanges += 1
-            return {"consensus": self.consensus,
-                    "staleness": self.round - round_idx,
-                    "n_active": len(self._active)}
+            reply = {"consensus": self.consensus,
+                     "staleness": self.round - round_idx,
+                     "n_active": len(self._active)}
+            self._replies[worker] = (round_idx, reply)
+            if self.ck_dir and self.round > prev_round:
+                try:
+                    self._ck_locked()
+                except Exception as e:      # pragma: no cover
+                    sys.stderr.write(f"coordinator: periodic checkpoint "
+                                     f"failed: {e}\n")
+            return reply
 
     # -- checkpointing --------------------------------------------
     def digest(self) -> str:
@@ -187,20 +401,60 @@ class Coordinator:
         """Checkpoint the consensus + per-worker contribution stamps.
         The tree is {"consensus": {leaf index: flat f32 vec}} — layout-
         free, so ANY worker count can resume from it."""
-        from repro.checkpoint import checkpoint as ckpt
         with self._lock:
-            if self.consensus is None:
-                raise ValueError("no consensus to checkpoint yet "
-                                 "(no worker has exchanged)")
-            tree = {"consensus": {str(i): np.asarray(v, np.float32)
-                                  for i, v in enumerate(self.consensus)}}
-            stamps = {w: {"round": r["round"], "count": r["count"]}
-                      for w, r in sorted(self._table.items())}
-            ckpt.save(path, tree, step=self.round,
-                      meta={"kind": "async_consensus", "decay": self.decay,
-                            "sync_compress": self.method,
-                            "workers": stamps, "digest": self.digest()},
-                      algo="parle", metrics=metrics)
+            self._save_locked(path, metrics=metrics)
+
+    def _save_locked(self, path: str, metrics=None):
+        from repro.checkpoint import checkpoint as ckpt
+        if self.consensus is None:
+            raise ValueError("no consensus to checkpoint yet "
+                             "(no worker has exchanged)")
+        tree = {"consensus": {str(i): np.asarray(v, np.float32)
+                              for i, v in enumerate(self.consensus)}}
+        stamps = {w: {"round": r["round"], "count": r["count"]}
+                  for w, r in sorted(self._table.items())}
+        ckpt.save(path, tree, step=self.round,
+                  meta={"kind": "async_consensus", "decay": self.decay,
+                        "sync_compress": self.method,
+                        "workers": stamps, "digest": self.digest()},
+                  algo="parle", metrics=metrics)
+
+    def _ck_locked(self):
+        """Periodic crash-recovery checkpoint on a round advance:
+        atomic write into ``ck_dir``, pruned to the newest ``ck_keep``
+        (each survivor is a valid restart point for the supervisor)."""
+        path = os.path.join(self.ck_dir,
+                            f"consensus_r{self.round:06d}.npz")
+        self._save_locked(path)
+        kept = sorted(f for f in os.listdir(self.ck_dir)
+                      if f.startswith("consensus_r")
+                      and f.endswith(".npz"))
+        for stale in kept[:-self.ck_keep]:
+            for p in (os.path.join(self.ck_dir, stale),
+                      os.path.join(self.ck_dir, stale) + ".json"):
+                try:
+                    os.remove(p)
+                except OSError:             # pragma: no cover
+                    pass
+
+    # -- lifecycle ------------------------------------------------
+    def crash(self):
+        """Die the way SIGKILL kills a coordinator process: every
+        socket severed mid-conversation, all in-memory state (table,
+        reply cache, consensus) abandoned.  Clients observe connection
+        resets / refused reconnects — nothing graceful.  Recovery goes
+        through :class:`CoordinatorSupervisor`."""
+        self._crashed = True
+        self._stopping.set()
+        try:
+            self._listener.close()
+        except OSError:                     # pragma: no cover
+            pass
+        for conn in list(self._conns):
+            try:
+                conn.close()
+            except OSError:                 # pragma: no cover
+                pass
 
     def close(self):
         self._stopping.set()
@@ -210,6 +464,121 @@ class Coordinator:
             pass
         for t in self._conn_threads:
             t.join(timeout=2)
+
+
+class CoordinatorSupervisor:
+    """Owns the coordinator's lifecycle inside the pod parent: fires
+    scripted ``coordinator_kill`` faults (crash at a consensus round,
+    down for ``down_ms``), then restarts the coordinator FROM THE
+    NEWEST VALID periodic checkpoint on the same port — in-memory state
+    is discarded exactly as a real SIGKILL would, and workers rejoin
+    transparently through their retry loop.  Counters accumulate across
+    incarnations so the merged pod snapshot sees pod-lifetime totals."""
+
+    _COUNTERS = ("exchanges", "evictions", "quarantines",
+                 "corrupt_frames", "duplicates")
+
+    def __init__(self, port: int, kills=(), sink=None, **coord_kw):
+        self.sink = sink
+        self._kw = dict(coord_kw)
+        # the first incarnation's seed state (a --resume checkpoint) is
+        # kept OUT of the restart kwargs: scripted restarts load from
+        # the newest valid periodic checkpoint, falling back to this
+        # seed only when none was written yet
+        self._seed = (self._kw.pop("consensus", None),
+                      self._kw.pop("start_round", 0))
+        self._kills = sorted((dict(k) for k in kills),
+                             key=lambda k: k["round"])
+        self.restarts = 0
+        self._base = {c: 0 for c in self._COUNTERS}
+        self._lock = threading.Lock()
+        self.coord = Coordinator(port, sink=sink,
+                                 consensus=self._seed[0],
+                                 start_round=self._seed[1], **self._kw)
+        self.port = self.coord._listener.address[1]   # resolved (port 0)
+        self._stop = threading.Event()
+        self._monitor = None
+        if self._kills:
+            self._monitor = threading.Thread(target=self._watch,
+                                             daemon=True)
+            self._monitor.start()
+
+    # -- delegation -----------------------------------------------
+    @property
+    def round(self):
+        return self.coord.round
+
+    @property
+    def consensus(self):
+        return self.coord.consensus
+
+    def digest(self):
+        return self.coord.digest()
+
+    def save(self, path, metrics=None):
+        self.coord.save(path, metrics=metrics)
+
+    def counter(self, name: str) -> int:
+        with self._lock:
+            return self._base[name] + getattr(self.coord, name)
+
+    # -- kill/restart ---------------------------------------------
+    def _watch(self):
+        while self._kills and not self._stop.is_set():
+            kill = self._kills[0]
+            if self.coord.round < kill["round"] \
+                    or self.coord.consensus is None:
+                self._stop.wait(0.02)
+                continue
+            self._kills.pop(0)
+            self._fire(kill)
+
+    def _fire(self, kill):
+        coord = self.coord
+        ck_dir = self._kw.get("ck_dir", "")
+        with self._lock:
+            for c in self._COUNTERS:
+                self._base[c] += getattr(coord, c)
+        sys.stderr.write(f"supervisor: killing coordinator at round "
+                         f"{coord.round}\n")
+        coord.crash()
+        time.sleep(kill.get("down_ms", 200.0) / 1e3)
+        consensus, start_round = self._seed
+        path = None
+        if ck_dir:
+            from repro.checkpoint import checkpoint as ckpt
+            path = ckpt.latest_valid(ck_dir)
+        if path is not None:
+            consensus, start_round, _ = load_consensus(path)
+        else:                               # pragma: no cover
+            sys.stderr.write("supervisor: no valid checkpoint to restart "
+                             "from; restarting from the seed state\n")
+        # the bind can transiently collide with the dead incarnation's
+        # socket corpses — retry until the kernel releases the port
+        deadline = time.monotonic() + 15.0
+        while True:
+            try:
+                self.coord = Coordinator(self.port, sink=self.sink,
+                                         consensus=consensus,
+                                         start_round=start_round,
+                                         **self._kw)
+                break
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.1)
+        self.restarts += 1
+        sys.stderr.write(f"supervisor: coordinator restarted from round "
+                         f"{start_round} ({path})\n")
+        if self.sink is not None:
+            self.sink.emit("coordinator_restart", round=start_round,
+                           restarts=self.restarts)
+
+    def close(self):
+        self._stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=2)
+        self.coord.close()
 
 
 def load_consensus(path: str):
@@ -228,38 +597,174 @@ def load_consensus(path: str):
 class CoordinatorClient:
     """Worker-side connection.  ``exchange`` measures nothing itself —
     the caller times the call, which IS the worker's entire
-    synchronization wait under the async policy."""
+    synchronization wait under the async policy.
+
+    Hardened: every RPC runs a retry loop with capped exponential
+    backoff + deterministic jitter — transport errors, CRC-rejected
+    frames, and reply timeouts all close the socket, reconnect (the
+    coordinator may be restarting), transparently RE-JOIN if this
+    client had joined before, and re-send.  The coordinator's
+    idempotent exchange makes the re-send safe.  A ``stopped`` reply
+    raises :class:`CoordinatorStopped` immediately (intentional
+    shutdown is not retried); exhausting the retry window raises
+    :class:`CoordinatorUnavailable`.  A daemon thread heartbeats every
+    ``heartbeat_s`` so the coordinator can tell hung from healthy-slow;
+    :meth:`freeze` suspends beats AND the caller — a whole-process hang
+    (what SIGSTOP does), which is exactly what gets a worker evicted."""
 
     def __init__(self, port: int, worker: str, count: int = 1,
-                 retry_s: float = 30.0):
-        import time
-        deadline = time.monotonic() + retry_s
+                 retry_s: float = 30.0, rpc_timeout_s: float = 60.0,
+                 heartbeat_s: float = 1.0):
+        self.port = port
+        self.worker = worker
+        self.count = count
+        self.retry_s = retry_s
+        self.rpc_timeout_s = rpc_timeout_s
+        self.heartbeat_s = heartbeat_s
+        self.reconnects = 0
+        self._joined = False
+        self._frozen_until = 0.0
+        self._io_lock = threading.RLock()
+        self._rng = random.Random(f"client:{worker}")   # jitter (det.)
+        self.conn = None
+        self._ensure_connected(time.monotonic() + retry_s, op="join")
+        self._beat_stop = threading.Event()
+        self._beater = None
+        if heartbeat_s and heartbeat_s > 0:
+            self._beater = threading.Thread(target=self._beat_loop,
+                                            daemon=True)
+            self._beater.start()
+
+    # -- connection management ------------------------------------
+    def _close_conn(self):
+        with self._io_lock:
+            if self.conn is not None:
+                try:
+                    self.conn.close()
+                except OSError:             # pragma: no cover
+                    pass
+                self.conn = None
+
+    def _ensure_connected(self, deadline: float, op: str = ""):
+        """(Re)connect within ``deadline``; after a reconnect of a
+        joined client, transparently re-join so the (possibly freshly
+        restarted) coordinator has this worker active again before the
+        caller's op lands."""
+        if self.conn is not None:
+            return
+        first = not self._joined and self.reconnects == 0
         while True:
             try:
-                self.conn = Client(("127.0.0.1", port), authkey=AUTHKEY)
+                self.conn = Client(("127.0.0.1", self.port),
+                                   authkey=AUTHKEY)
+                if not first:
+                    self.reconnects += 1
                 break
             except (ConnectionRefusedError, FileNotFoundError, OSError):
                 if time.monotonic() >= deadline:
-                    raise
+                    raise CoordinatorUnavailable(
+                        f"worker {self.worker}: coordinator on port "
+                        f"{self.port} unreachable")
                 time.sleep(0.1)
-        self.worker = worker
-        self.count = count
+        if self._joined and op != "join":
+            _send_frame(self.conn, {"op": "join", "worker": self.worker,
+                                    "count": self.count, "rejoin": True})
+            reply = _recv_frame(self.conn, timeout=max(
+                min(30.0, deadline - time.monotonic()), 0.1))
+            if isinstance(reply, dict) and reply.get("error") == "stopped":
+                raise CoordinatorStopped("coordinator is stopped")
 
-    def _rpc(self, msg):
-        self.conn.send(msg)
-        return self.conn.recv()
+    def drop_connection(self):
+        """Chaos injection: sever the socket (the next RPC reconnects,
+        re-joins, and re-sends)."""
+        self._close_conn()
+
+    def freeze(self, ms: float):
+        """Chaos injection: whole-process hang for ``ms`` — heartbeats
+        stop AND the calling thread sleeps, so the coordinator sees
+        true silence (a sleeping worker with live heartbeats would be
+        healthy-slow, not hung)."""
+        self._frozen_until = time.monotonic() + ms / 1e3
+        time.sleep(ms / 1e3)
+
+    def _beat_loop(self):
+        while not self._beat_stop.wait(self.heartbeat_s):
+            if time.monotonic() < self._frozen_until:
+                continue
+            if not self._io_lock.acquire(blocking=False):
+                continue        # an RPC is in flight — it proves liveness
+            try:
+                if self.conn is None \
+                        or time.monotonic() < self._frozen_until:
+                    continue
+                _send_frame(self.conn, {"op": "heartbeat",
+                                        "worker": self.worker})
+                reply = _recv_frame(self.conn, timeout=5.0)
+                if isinstance(reply, dict) and reply.get("error"):
+                    continue    # stopped/bad_frame: main thread decides
+            except (OSError, EOFError, FrameError):
+                # a timed-out beat leaves its reply queued — drop the
+                # socket so a stale reply can never cross with an RPC
+                self._close_conn()
+            finally:
+                self._io_lock.release()
+
+    # -- RPC ------------------------------------------------------
+    def _rpc(self, msg, corrupt_first: bool = False, timeout_s=None):
+        total = self.rpc_timeout_s if timeout_s is None else timeout_s
+        deadline = time.monotonic() + total
+        attempt = 0
+        corrupt = corrupt_first
+        while True:
+            try:
+                with self._io_lock:
+                    self._ensure_connected(deadline, op=msg.get("op", ""))
+                    _send_frame(self.conn, msg, corrupt=corrupt)
+                    corrupt = False
+                    reply = _recv_frame(self.conn, timeout=max(
+                        min(30.0, deadline - time.monotonic()), 0.1))
+                err = reply.get("error") if isinstance(reply, dict) \
+                    else None
+                if err == "bad_frame":
+                    continue    # checksum caught it — re-send clean
+                if err == "stopped":
+                    raise CoordinatorStopped("coordinator is stopped")
+                if err:
+                    raise RuntimeError(f"coordinator error: {err}")
+                return reply
+            except (OSError, EOFError, FrameError) as e:
+                self._close_conn()
+                if time.monotonic() >= deadline:
+                    raise CoordinatorUnavailable(
+                        f"worker {self.worker}: coordinator unreachable "
+                        f"after {total:.0f}s "
+                        f"({type(e).__name__}: {e})") from e
+                delay = min(2.0, 0.05 * (2 ** attempt))
+                delay *= 1.0 + 0.25 * self._rng.random()
+                attempt += 1
+                time.sleep(min(delay,
+                               max(deadline - time.monotonic(), 0.0)))
 
     def join(self):
-        return self._rpc({"op": "join", "worker": self.worker,
-                          "count": self.count})
+        reply = self._rpc({"op": "join", "worker": self.worker,
+                           "count": self.count})
+        self._joined = True
+        return reply
 
-    def exchange(self, payload, round_idx: int):
+    def exchange(self, payload, round_idx: int,
+                 corrupt_first: bool = False):
         return self._rpc({"op": "exchange", "worker": self.worker,
                           "count": self.count, "round": round_idx,
-                          "payload": payload})
+                          "payload": payload},
+                         corrupt_first=corrupt_first)
 
     def leave(self):
+        self._beat_stop.set()
         try:
-            self._rpc({"op": "leave", "worker": self.worker})
+            self._rpc({"op": "leave", "worker": self.worker},
+                      timeout_s=5.0)
+        except (CoordinatorStopped, CoordinatorUnavailable):
+            pass            # leaving a stopped/gone coordinator is a no-op
         finally:
-            self.conn.close()
+            self._close_conn()
+            self._joined = False

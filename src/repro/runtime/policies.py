@@ -103,14 +103,16 @@ class AsyncElasticPolicy(SyncPolicy):
     name = "async"
 
     def __init__(self, client, pcfg, obs, worker: int,
-                 lr_schedule=None):
+                 lr_schedule=None, faults=None):
         self.client = client
         self.pcfg = pcfg
         self.obs = obs
         self.worker = worker
         self.lr_schedule = lr_schedule
+        self.faults = faults            # WorkerFaults | None (chaos)
         self._apply = None
         self.exchanges = 0
+        self.quarantined = 0
         self.last_reply = None
 
     def make_step_fn(self, algo, loss_fn, pcfg, *, mesh=None,
@@ -141,9 +143,16 @@ class AsyncElasticPolicy(SyncPolicy):
         straggler-tolerance evidence."""
         from repro.core import parle
         obs = self.obs
+        rnd = r + 1
         payload, e_new = parle.async_contribution(state, self.pcfg)
+        corrupt = bool(self.faults is not None
+                       and self.faults.corrupt(rnd, obs))
+        if self.faults is not None and self.faults.poison(rnd, obs):
+            from repro.runtime import faults as faults_mod
+            faults_mod.poison_payload(payload)
         t0 = time.perf_counter()
-        reply = self.client.exchange(payload, round_idx=r + 1)
+        reply = self.client.exchange(payload, round_idx=rnd,
+                                     corrupt_first=corrupt)
         wait_ms = (time.perf_counter() - t0) * 1e3
         self.exchanges += 1
         self.last_reply = reply
@@ -152,6 +161,19 @@ class AsyncElasticPolicy(SyncPolicy):
                 "pod.sync_wait_ms", worker=self.worker).observe(wait_ms)
             obs.registry.gauge("pod.staleness").set(reply["staleness"])
             obs.registry.gauge("pod.n_active").set(reply["n_active"])
+        if reply.get("quarantined"):
+            # the coordinator refused this contribution (NaN/Inf or
+            # norm outlier) and told us to restart from consensus —
+            # drop the (poisoned) residual and re-seed y/x/z
+            self.quarantined += 1
+            obs.registry.counter("pod.quarantined_updates",
+                                 worker=self.worker).inc()
+            obs.emit("worker_quarantined", worker=str(self.worker),
+                     reason=reply.get("reason", ""))
+            if reply["consensus"] is None:
+                return state        # nothing to re-seed from yet
+            xbar = parle.consensus_from_flat(reply["consensus"], state.x)
+            return parle.reseed_from_consensus(state, xbar)
         if e_new is not None:
             state = state._replace(e=e_new)
         if self._apply is None:

@@ -150,6 +150,7 @@ class Engine:
         self.obs = registry if registry is not None else Registry()
         self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         self._t_submit = {}          # uid -> perf_counter at submit()
+        self._deadline = {}          # uid -> perf_counter shed deadline
         self._n_done_obs = 0         # finished-dict prefix already observed
 
     # -- submission ---------------------------------------------------
@@ -158,10 +159,12 @@ class Engine:
         return int(req.cond.shape[0]) if req.cond is not None else 0
 
     def submit(self, tokens, max_new_tokens: int, eos_id: Optional[int] = None,
-               arrival: int = 0, cond=None, patch_embeds=None) -> int:
+               arrival: int = 0, cond=None, patch_embeds=None,
+               deadline_ms: Optional[float] = None) -> int:
         req = Request(uid=self._uid, tokens=tokens,
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      arrival=arrival, cond=cond, patch_embeds=patch_embeds)
+                      arrival=arrival, cond=cond, patch_embeds=patch_embeds,
+                      deadline_ms=deadline_ms)
         if req.prompt_len + max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt_len {req.prompt_len} + max_new_tokens "
@@ -177,6 +180,10 @@ class Engine:
                     f"{self.pool.alloc.usable} usable pages")
         self._uid += 1
         self._t_submit[req.uid] = time.perf_counter()
+        if deadline_ms is not None:
+            if deadline_ms <= 0:
+                raise ValueError("deadline_ms must be > 0")
+            self._deadline[req.uid] = self._t_submit[req.uid] + deadline_ms / 1e3
         self.obs.counter("serve.requests").inc()
         self.sched.submit(req)
         return req.uid
@@ -427,6 +434,36 @@ class Engine:
         if plan is not None and self.uses_pages:
             self.pool.release(plan)
 
+    # -- graceful degradation: deadline shedding ----------------------
+    def _shed_expired(self) -> None:
+        """Shed every request whose ``deadline_ms`` budget has expired:
+        queued requests are dropped at admission (zero tokens), occupied
+        slots are evicted between decode chunks keeping their partial
+        output.  An overloaded engine degrades the expired tail instead
+        of serving everything late."""
+        if not self._deadline:
+            return
+        now = time.perf_counter()
+        for uid in [u for u, t in self._deadline.items() if now > t]:
+            if uid in self.sched.finished:      # beat the deadline
+                self._deadline.pop(uid, None)
+                continue
+            if self.sched.shed_queued(uid):
+                self._shed_obs(uid, "queued")
+                continue
+            for slot, rec in enumerate(self.sched.slots):
+                if rec is not None and rec.request.uid == uid:
+                    self.sched.shed_slot(slot)
+                    if self.paged:
+                        self._release_slot(slot)
+                    self._shed_obs(uid, "slot")
+                    break
+
+    def _shed_obs(self, uid: int, where: str) -> None:
+        self._deadline.pop(uid, None)
+        self.obs.counter("serve.deadline_exceeded", where=where).inc()
+        self.obs.counter("serve.deadline_exceeded").inc()
+
     # -- per-request latency bookkeeping ------------------------------
     def _observe_first_token(self, uid: int) -> None:
         """TTFT: submit() -> the request's first emitted token.  Called
@@ -448,6 +485,7 @@ class Engine:
         hist = self.obs.histogram("serve.completion_ms", _LATENCY_BOUNDS_MS)
         for uid in list(done.keys())[self._n_done_obs:]:
             t0 = self._t_submit.pop(uid, None)
+            self._deadline.pop(uid, None)
             if t0 is not None:
                 hist.observe((now - t0) * 1e3)
             self.obs.counter("serve.finished").inc()
@@ -465,8 +503,9 @@ class Engine:
 
     # -- the engine loop ----------------------------------------------
     def step(self) -> None:
-        """One engine step: admit, advance prefills (paged), decode one
-        chunk."""
+        """One engine step: shed expired deadlines, admit, advance
+        prefills (paged), decode one chunk."""
+        self._shed_expired()
         if self.paged:
             self._admit_paged()
             self._prefill_step_paged()
@@ -579,7 +618,7 @@ class Engine:
         out["counters"] = {
             name: self.obs.counter(f"serve.{name}").total
             for name in ("requests", "admitted", "requeued", "backpressure",
-                         "finished")}
+                         "finished", "deadline_exceeded")}
         if self.paged:
             out["prefix_hit_rate"] = round(self.pool.prefix_hit_rate(), 4) \
                 if self.uses_pages else 0.0

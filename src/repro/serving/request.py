@@ -25,6 +25,9 @@ class Request:
                                          # arrivals; 0 = immediately)
     cond: Optional[Any] = None           # audio conditioning (cond_len, d)
     patch_embeds: Optional[Any] = None   # vlm patches (num_patches, d)
+    deadline_ms: Optional[float] = None  # wall budget from submit(); an
+                                         # expired request is SHED (graceful
+                                         # degradation) instead of served late
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)

@@ -128,6 +128,27 @@ class Scheduler:
         self.finished[rec.request.uid] = rec
         self.slots[slot] = None
 
+    # -- deadline shedding --------------------------------------------
+    def shed_queued(self, uid: int) -> bool:
+        """Drop a QUEUED request whose deadline expired.  It finishes
+        immediately with zero tokens (the record lands in ``finished``
+        so the caller's results() still covers every submitted uid)."""
+        for j, req in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[j]
+                self.finished[uid] = SlotRecord(request=req, done=True)
+                return True
+        return False
+
+    def shed_slot(self, slot: int) -> None:
+        """Evict an OCCUPIED slot before natural termination (deadline
+        expired mid-prefill or mid-decode).  Partial tokens emitted so
+        far are kept in ``finished`` — degraded output beats none."""
+        rec = self.slots[slot]
+        assert rec is not None, f"slot {slot} empty"
+        rec.done = True
+        self._evict(slot)
+
     def absorb_chunk(self, chunk_tokens: np.ndarray) -> List[int]:
         """Feed one decode chunk's tokens — (C, B) or (C, B, K) — to the
         occupied slots.  A slot that terminates at step j ignores the

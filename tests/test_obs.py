@@ -297,7 +297,8 @@ def test_engine_reports_latency_histograms(key):
     assert tp["itl_ms"]["count"] == 3 * (gen - 1)   # first token = prefill
     assert tp["completion_ms"]["p50"] >= tp["ttft_ms"]["min"] >= 0
     assert tp["counters"] == {"requests": 3, "admitted": 3, "requeued": 0,
-                              "backpressure": 0, "finished": 3}
+                              "backpressure": 0, "finished": 3,
+                              "deadline_exceeded": 0}
     # pre-existing aggregate keys stay (aliases for one release)
     for old in ("compile_s", "prefill_tokens_per_s", "decode_tokens_per_s",
                 "slot_utilization", "wasted_decode_tokens"):
